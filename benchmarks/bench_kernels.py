@@ -1,0 +1,116 @@
+"""Pallas kernel benches (interpret mode on CPU: correctness + structural
+roofline, not wall-clock).
+
+probe kernel: shape/dtype sweep vs the jnp oracle; fast-path coverage
+(fraction of lookups resolved inside the VMEM-resident window) at several
+load factors — the TPU analog of the paper's "one cache line per lookup".
+paged_attention kernel: allclose vs ref across head/page sweeps.
+
+Structural roofline per kernel: VMEM working set from the BlockSpecs and
+bytes/FLOPs per tile (HBM->VMEM DMA volume is the kernel's roofline term).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched as BT
+from repro.kernels.probe import ops as probe_ops
+from repro.kernels.probe.probe import DEFAULT_KT, DEFAULT_TB, LANES
+
+
+def probe_correctness(loads=(0.3, 0.6, 0.85), m: int = 1 << 14,
+                      B: int = 1 << 10, seed: int = 0, verbose=True):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for load in loads:
+        ht = BT.create(m)
+        keys = rng.choice(BT.E.MAX_KEY, size=int(load * m),
+                          replace=False).astype(np.uint32)
+        for i in range(0, len(keys), 4096):
+            chunk = keys[i:i + 4096]
+            ht, _ = BT.insert_batch(ht, jnp.asarray(
+                np.pad(chunk, (0, 4096 - len(chunk)))),
+                active=jnp.arange(4096) < len(chunk))
+        q = np.concatenate([rng.choice(keys, B // 2),
+                            rng.choice(BT.E.MAX_KEY, B // 2)]).astype(
+                                np.uint32)
+        f_k, s_k = probe_ops.probe_lookup(ht, jnp.asarray(q), TB=2048,
+                                          KT=128, interpret=True)
+        f_r, s_r = BT.find_batch(ht, jnp.asarray(q))
+        np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        cov = float(probe_ops.resolved_fraction(ht, jnp.asarray(q), TB=2048,
+                                                KT=128, interpret=True))
+        rows.append({"load": load, "fastpath_coverage": cov})
+    if verbose:
+        print("bench_kernels/probe — kernel == oracle at all loads; "
+              "fast-path coverage:")
+        for r in rows:
+            print(f"  load {r['load']:4.2f}: {r['fastpath_coverage']:6.3f}")
+    return rows
+
+
+def probe_structural(TB: int = DEFAULT_TB, KT: int = DEFAULT_KT,
+                     verbose=True):
+    """VMEM working set + DMA volume per tile from the BlockSpecs."""
+    vmem = {
+        "table_blocks(u32)": 2 * TB * 4,
+        "scratch(u32)": 2 * TB * 4,
+        "keys+hv(u32/i32)": 2 * KT * 4,
+        "outputs(i32x3)": 3 * KT * 4,
+    }
+    total = sum(vmem.values())
+    dma_per_tile = 2 * TB * 4                      # two table blocks
+    probe_bytes_per_key = dma_per_tile / KT        # amortized over the tile
+    out = {"vmem_bytes": total, "dma_per_tile": dma_per_tile,
+           "bytes_per_lookup": probe_bytes_per_key,
+           "vmem_budget_ok": total < 16 * 2 ** 20}
+    if verbose:
+        print(f"  structural: VMEM/tile {total/2**10:.0f} KiB (<16 MiB ok), "
+              f"HBM bytes/lookup {probe_bytes_per_key:.0f} "
+              f"(sequential: >= {64} per cache line)")
+    return out
+
+
+def paged_attention_correctness(verbose=True):
+    from repro.kernels.paged_attention import ops as pa_ops
+    from repro.kernels.paged_attention import ref as pa_ref
+    rng = np.random.default_rng(0)
+    rows = []
+    for (B, H, hd, P, psize) in [(2, 2, 16, 8, 16), (2, 4, 32, 16, 8)]:
+        pool_k = jnp.asarray(rng.normal(size=(P, psize, H, hd)),
+                             jnp.float32)
+        pool_v = jnp.asarray(rng.normal(size=(P, psize, H, hd)),
+                             jnp.float32)
+        n_pages = 4
+        page_ids = jnp.asarray(rng.integers(0, P, size=(B, n_pages)),
+                               jnp.int32)
+        lengths = jnp.asarray(rng.integers(1, n_pages * psize, size=(B,)),
+                              jnp.int32)
+        q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+        out_k = pa_ops.paged_attention(q, pool_k, pool_v, page_ids, lengths,
+                                       interpret=True)
+        out_r = pa_ref.paged_attention_ref(q, pool_k, pool_v, page_ids,
+                                           lengths)
+        err = float(jnp.max(jnp.abs(out_k - out_r)))
+        rows.append({"shape": (B, H, hd, P, psize), "max_err": err})
+        assert err < 2e-5, err
+    if verbose:
+        print("bench_kernels/paged_attention — kernel == ref:")
+        for r in rows:
+            print(f"  shape {r['shape']}: max_err {r['max_err']:.2e}")
+    return rows
+
+
+def run(verbose: bool = True, fast: bool = False) -> dict:
+    loads = (0.3, 0.6) if fast else (0.3, 0.6, 0.85)
+    out = {
+        "probe": probe_correctness(loads=loads, verbose=verbose,
+                                   m=1 << 13 if fast else 1 << 14,
+                                   B=256 if fast else 1 << 10),
+        "probe_structural": probe_structural(verbose=verbose),
+        "paged_attention": paged_attention_correctness(verbose=verbose),
+    }
+    return out

@@ -1,0 +1,100 @@
+"""Tombstone reuse vs the no-reuse baseline [7,14] under sustained churn.
+
+Fixed live working set (W keys), repeated delete+insert batches.  The
+paper's table: occupancy stays ~W/m forever (deleted slots are reclaimed).
+No-reuse: occupancy (keys+tombstones) climbs monotonically to the rebuild
+threshold — the periodic rebuild cost the paper eliminates.  Also replays
+the same churn on the serving page-table (pages are the keys) — the
+production integration of the same property.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched as BT
+from repro.core.baselines import gao_noreuse as GN
+from repro.serving import page_table as PT
+
+
+def churn(module, m: int, working: int, rounds: int, seed: int = 0):
+    """Returns (per-round occupancy, #rebuilds, #aborts).  Rebuild policy
+    applies to the no-reuse module only (ours never rebuilds)."""
+    ht = module.create(m)
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(BT.E.MAX_KEY, size=working, replace=False).astype(
+        np.uint32)
+    ht, _ = module.insert_batch(ht, jnp.asarray(keys))
+    occ, rebuilds, aborts = [], 0, 0
+    for r in range(rounds):
+        victims = rng.choice(working, size=working // 4, replace=False)
+        ht, _ = module.delete_batch(ht, jnp.asarray(keys[victims]))
+        fresh = rng.choice(BT.E.MAX_KEY, size=len(victims),
+                           replace=False).astype(np.uint32)
+        keys[victims] = fresh
+        ht, ret = module.insert_batch(ht, jnp.asarray(fresh))
+        aborts += int((np.asarray(ret) == 2).sum())
+        if hasattr(module, "needs_rebuild") and bool(module.needs_rebuild(ht)):
+            ht = module.rebuild(ht)
+            rebuilds += 1
+        occ.append(float(BT.occupancy(ht)))
+    return occ, rebuilds, aborts
+
+
+def page_churn(n_pages: int = 512, B: int = 16, page_size: int = 4,
+               rounds: int = 40, seed: int = 1):
+    """Same story on the paged-KV allocator: evict/admit sequences."""
+    table = PT.create_table(n_pages)
+    rng = np.random.default_rng(seed)
+    pos = np.zeros(B, np.int32)
+    seq = np.arange(B, dtype=np.int32)
+    next_id = B
+    occ = []
+    maxP = 16
+    for r in range(rounds):
+        for _ in range(8):
+            table, slots = PT.alloc_step(table, jnp.asarray(seq),
+                                         jnp.asarray(pos),
+                                         page_size=page_size)
+            assert (np.asarray(slots) >= 0).all(), "allocator aborted"
+            pos += 1
+        # evict half the sequences
+        victims = rng.choice(B, size=B // 2, replace=False)
+        mask = np.zeros(B, bool)
+        mask[victims] = True
+        table = PT.free_sequences(table, jnp.asarray(seq), jnp.asarray(pos),
+                                  page_size=page_size, max_pages=maxP,
+                                  active=jnp.asarray(mask))
+        for v in victims:
+            seq[v] = next_id
+            next_id += 1
+            pos[v] = 0
+        occ.append(float(BT.occupancy(table)))
+    return occ
+
+
+def run(verbose: bool = True, fast: bool = False) -> dict:
+    m, working, rounds = (256, 96, 20) if fast else (1024, 384, 40)
+    ours_occ, ours_rebuilds, ours_aborts = churn(BT, m, working, rounds)
+    base_occ, rebuilds, _ = churn(GN, m, working, rounds)
+    pocc = page_churn(rounds=15 if fast else 40)
+    out = {"ours_final_occ": ours_occ[-1], "ours_max_occ": max(ours_occ),
+           "ours_aborts": ours_aborts,
+           "noreuse_rebuilds": rebuilds, "noreuse_final_occ": base_occ[-1],
+           "page_table_max_occ": max(pocc)}
+    if verbose:
+        print("bench_reuse — churn at fixed working set "
+              f"(m={m}, live={working}, {rounds} rounds of 25% turnover)")
+        print(f"  ours      : 0 rebuilds, {ours_aborts} aborts over "
+              f"{rounds} rounds; occupancy equilibrates at "
+              f"{ours_occ[-1]:.3f} (tombstones reclaimed when probe runs "
+              f"cross them — Prop. 2: space is reusable, no rebuild ever "
+              f"REQUIRED)")
+        print(f"  no-reuse  : {rebuilds} rebuild(s) forced "
+              f"(occupancy only grows; hits the 0.95 threshold)")
+        print(f"  paged-KV  : page-slot occupancy <= {max(pocc):.3f} under "
+              f"sequence churn; allocator never aborted")
+    assert ours_rebuilds == 0 and ours_aborts == 0, \
+        "ours should sustain churn without rebuilds or aborts"
+    assert rebuilds >= 1, "baseline should have needed a rebuild"
+    return out

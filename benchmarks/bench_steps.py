@@ -1,0 +1,112 @@
+"""Theorem 21 reproduction: expected amortized step complexity O(x² + c).
+
+Two sweeps on the faithful simulator (exact Algorithms 1-6 event machine):
+  (a) load factor: insert-only batches filling to (1-1/x)m for several x,
+      no concurrent same-key inserts -> mean steps/op vs Knuth's x² curve.
+  (b) contention: c-bounded fixed workloads at fixed load -> mean steps/op
+      vs c (expect ~linear additive growth).
+Both LL/SC and CAS variants (Thm 21 covers both).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import schedulers as SCH
+from repro.core import simulator as SIM
+from repro.core.simulator import Workload
+from repro.core.spec import OP_INSERT, OP_NONE
+
+SCH.Workload = Workload
+SCH.OP_INSERT = OP_INSERT
+from repro.core.spec import OP_DELETE as _OPD, OP_LOOKUP as _OPL
+SCH.OP_DELETE = _OPD
+SCH.OP_LOOKUP = _OPL
+
+
+def _mean_steps(state, wl, only_op=None) -> float:
+    op = np.asarray(wl.op)
+    steps = np.asarray(state.steps)
+    res = np.asarray(state.results)
+    mask = (op != OP_NONE) & (res != -1)       # completed ops only
+    if only_op is not None:
+        mask &= op == only_op
+    return float(steps[mask].mean()) if mask.any() else float("nan")
+
+
+def sweep_load(mode: str, m: int = 256, P: int = 8, seed: int = 0,
+               xs=(1.5, 2.0, 3.0, 4.0)) -> list:
+    rng = np.random.default_rng(seed)
+    rows = []
+    for x in xs:
+        n_ins = int((1 - 1 / x) * m)
+        K = -(-n_ins // P)
+        wl = SCH.insert_only_distinct(P, K)
+        # random keys (sequential keys + multiply-shift = unrealistically
+        # uniform spread; Knuth's model assumes random hashing)
+        wl.key[:, :] = rng.choice(2 ** 27, size=(P, K),
+                                  replace=False).astype(np.uint32)
+        # trim overfill
+        wl.op[:, :][np.arange(P * K).reshape(P, K) >= n_ins] = OP_NONE
+        T = 400 * P * K
+        sched = SCH.uniform_schedule(rng, P, T)
+        st = SIM.simulate(wl, m, sched, mode=mode)
+        done = (np.asarray(st.results) != -1) | (np.asarray(wl.op) == OP_NONE)
+        assert done.all(), f"x={x}: {int((~done).sum())} ops unfinished"
+        rows.append({"x": x, "load": 1 - 1 / x,
+                     "mean_steps": _mean_steps(st, wl),
+                     "knuth_x2": 0.5 * (1 + x * x)})
+    return rows
+
+
+def sweep_contention(mode: str, m: int = 64, K: int = 12,
+                     seed: int = 1, cs=(1, 2, 4, 6)) -> list:
+    """Direct point-contention setup: ONE key; process 0 alternates
+    insert/delete (the single concurrent inserter Thm 21 allows); processes
+    1..c-1 hammer the same key with lookup/delete.  The O(c) interference
+    (revalidate resurrections, DELETED handoffs, failed Modifies) lands on
+    the inserter's step count."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    for c in cs:
+        P = c
+        op = np.zeros((P, K), dtype=np.int32)
+        op[0, 0::2] = SCH.OP_INSERT
+        op[0, 1::2] = SCH.OP_DELETE
+        if P > 1:
+            op[1:, 0::2] = SCH.OP_LOOKUP
+            op[1:, 1::2] = SCH.OP_DELETE
+        key = np.full((P, K), 7, dtype=np.uint32)
+        wl = SCH.Workload(op=op, key=key)
+        T = 800 * P * K
+        sched = SCH.uniform_schedule(rng, P, T)
+        st = SIM.simulate(wl, m, sched, mode=mode)
+        rows.append({"c": c, "mean_steps": _mean_steps(st, wl),
+                     "insert_steps": _mean_steps(st, wl, OP_INSERT)})
+    return rows
+
+
+def run(verbose: bool = True, fast: bool = False) -> dict:
+    out = {}
+    xs = (1.5, 2.0, 3.0) if fast else (1.5, 2.0, 3.0, 4.0)
+    cs = (1, 2, 4) if fast else (1, 2, 4, 6)
+    for mode in (SIM.MODE_LLSC, SIM.MODE_CAS):
+        load = sweep_load(mode, xs=xs)
+        cont = sweep_contention(mode, cs=cs)
+        out[mode] = {"load": load, "contention": cont}
+        if verbose:
+            print(f"bench_steps [{mode}] — load-factor sweep (Thm 21 / Knuth)")
+            print("      x    load   mean_steps   0.5(1+x^2)")
+            for r in load:
+                print(f"  {r['x']:5.1f}  {r['load']:5.2f}   "
+                      f"{r['mean_steps']:9.2f}   {r['knuth_x2']:9.2f}")
+            print(f"bench_steps [{mode}] — contention sweep (+O(c) term)")
+            print("      c    mean_steps   insert_steps")
+            for r in cont:
+                print(f"  {r['c']:5d}   {r['mean_steps']:9.2f}   "
+                      f"{r['insert_steps']:9.2f}")
+        # soft validations: steps grow with x and stay O(x^2)-ish; the
+        # contention curve grows no faster than ~linear + constant
+        ms = [r["mean_steps"] for r in load]
+        assert ms == sorted(ms), "steps not monotone in load"
+        assert ms[-1] < 40 * load[-1]["knuth_x2"], "way off Knuth bound"
+    return out

@@ -1,0 +1,62 @@
+"""Batched-table throughput (jit, CPU host): Mops/s for insert / lookup /
+delete / mixed at several load factors, ours vs the no-reuse baseline.
+CPU numbers are for relative comparison (the TPU path is the probe kernel,
+validated in interpret mode; see bench_kernels)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched as BT
+from repro.core.spec import OP_DELETE, OP_INSERT, OP_LOOKUP
+
+
+def _time(fn, *args, iters: int = 5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(verbose: bool = True, fast: bool = False) -> dict:
+    m = 1 << 14 if fast else 1 << 16
+    B = 1 << 10 if fast else 1 << 12
+    rng = np.random.default_rng(0)
+    rows = []
+    for load in (0.5, 0.75, 0.9):
+        ht = BT.create(m)
+        n0 = int(load * m)
+        base = rng.choice(BT.E.MAX_KEY, size=n0, replace=False).astype(
+            np.uint32)
+        for i in range(0, n0, B):
+            ht, _ = BT.insert_batch(ht, jnp.asarray(
+                np.pad(base[i:i + B], (0, max(0, B - len(base[i:i + B]))))))
+        present = jnp.asarray(base[:B])
+        absent = jnp.asarray(
+            rng.choice(BT.E.MAX_KEY, size=B).astype(np.uint32))
+
+        lookup = jax.jit(BT.lookup_batch)
+        t_hit = _time(lookup, ht, present)
+        t_miss = _time(lookup, ht, absent)
+        ops = jnp.asarray(rng.integers(0, 3, size=B), jnp.int32)
+        mixed_keys = jnp.where(jnp.asarray(rng.random(B) < 0.5), present,
+                               absent)
+        apply_b = jax.jit(BT.apply_batch)
+        t_mixed = _time(apply_b, ht, ops, mixed_keys)
+        rows.append({"load": load,
+                     "lookup_hit_Mops": B / t_hit / 1e6,
+                     "lookup_miss_Mops": B / t_miss / 1e6,
+                     "mixed_Mops": B / t_mixed / 1e6})
+    if verbose:
+        print(f"bench_throughput (jit CPU, m={m}, batch={B})")
+        print("   load   lookup-hit   lookup-miss   mixed  [Mops/s]")
+        for r in rows:
+            print(f"  {r['load']:5.2f}   {r['lookup_hit_Mops']:9.2f}   "
+                  f"{r['lookup_miss_Mops']:10.2f}   {r['mixed_Mops']:6.2f}")
+    return {"rows": rows}

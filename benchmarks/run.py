@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/claim + the roofline
+aggregation.  ``python -m benchmarks.run [--fast] [--only name]``."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes (CI)")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench (space|steps|reuse|throughput|"
+                         "kernels|roofline)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_kernels, bench_reuse, bench_roofline,
+                            bench_space, bench_steps, bench_throughput)
+    benches = {
+        "space": lambda: bench_space.run(),
+        "steps": lambda: bench_steps.run(fast=args.fast),
+        "reuse": lambda: bench_reuse.run(fast=args.fast),
+        "throughput": lambda: bench_throughput.run(fast=args.fast),
+        "kernels": lambda: bench_kernels.run(fast=args.fast),
+        "roofline": lambda: bench_roofline.run(),
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    results = {}
+    for name, fn in benches.items():
+        print(f"\n=== {name} " + "=" * (60 - len(name)))
+        t0 = time.time()
+        results[name] = fn()
+        print(f"[{name}] {time.time() - t0:.1f}s")
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print("\nall benchmarks done -> results/benchmarks.json")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,43 @@
+"""Serve a small model with batched requests through the paged engine:
+continuous batching, sequence eviction, tombstone-reuse page recycling, and
+a correctness check of decode-vs-forward on one request stream.
+
+Run: PYTHONPATH=src python examples/serve_paged.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import ContinuousBatcher
+from repro.models.registry import get_model
+from repro.serving import engine as EG
+
+cfg = get_smoke_config("qwen2.5-32b")
+model = get_model(cfg)
+params, _ = model.init(cfg, jax.random.PRNGKey(0))
+
+print("[example] greedy-decode correctness vs full forward")
+B, T = 2, 16
+toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
+ref, _ = model.forward(cfg, params, toks)
+state, _ = EG.make_decode_state(cfg, B, S_max=64, page_size=8)
+step = jax.jit(EG.make_serve_step(cfg, S_max=64, page_size=8))
+for t in range(T):
+    logits, state = step(params, state, toks[:, t:t + 1],
+                         jnp.full((B,), t, jnp.int32))
+err = float(jnp.max(jnp.abs(logits - ref[:, -1].astype(jnp.float32))))
+print(f"   last-token logits err vs forward: {err:.2e}")
+assert err < 6e-2
+
+print("[example] continuous batching under churn (tombstone reuse)")
+srv = ContinuousBatcher(cfg, params, batch=4, max_len=48, page_size=8)
+for r in range(6):
+    srv.decode_round(8)
+    st = srv.table_stats()
+    print(f"   round {r}: evictions={srv.evictions:3d} "
+          f"live={int(st.live_pages):3d} tombs={int(st.tombstones):3d} "
+          f"occupancy={float(st.occupancy):.3f}")
+final = srv.table_stats()
+assert float(final.occupancy) < 1.0, "allocator should never fill up"
+print("[example] serve_paged OK — pages recycled in place, no rebuild")

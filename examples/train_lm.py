@@ -1,0 +1,66 @@
+"""End-to-end training driver: train a ~100M-parameter qwen2.5-family model
+for a few hundred steps on synthetic data with the full production loop
+(AdamW + cosine schedule, remat, checkpointing, watchdog, dedup data
+pipeline) and verify the loss decreases.
+
+CPU-sized by default (~15M params, 300 steps); pass --full for the ~100M
+variant if you have the patience.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300] [--full]
+"""
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.train import TrainRunner
+
+
+def small_lm(full: bool) -> ModelConfig:
+    if full:  # ~100M
+        return ModelConfig(
+            name="lm-100m", family="dense", num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=32768,
+            head_dim=64, qkv_bias=True, tie_embeddings=True, rope_theta=1e4)
+    return ModelConfig(  # ~15M — minutes on CPU
+        name="lm-15m", family="dense", num_layers=6, d_model=384,
+        num_heads=6, num_kv_heads=2, d_ff=1024, vocab_size=8192,
+        head_dim=64, qkv_bias=True, tie_embeddings=True, rope_theta=1e4)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = small_lm(args.full)
+    from repro.models.registry import get_model
+    import jax
+    params, _ = get_model(cfg).init(cfg, jax.random.PRNGKey(0))
+    n = sum(int(x.size) for x in jax.tree.leaves(params))
+    print(f"[example] {cfg.name}: {n/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+
+    runner = TrainRunner(cfg, ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                         dedup=True)
+    t0 = time.time()
+    _, losses = runner.run(batch=args.batch, seq_len=args.seq,
+                           steps=args.steps, log_every=25)
+    dt = time.time() - t0
+    first = float(np.mean(losses[:10]))
+    last = float(np.mean(losses[-10:]))
+    toks = args.steps * args.batch * args.seq
+    print(f"[example] {dt:.0f}s ({toks/dt:.0f} tok/s CPU); "
+          f"loss {first:.3f} -> {last:.3f}")
+    assert last < first - 0.1, "loss did not decrease"
+    print("[example] train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Baselines the paper compares against (Table 1)."""

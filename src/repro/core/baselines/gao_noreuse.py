@@ -1,0 +1,43 @@
+"""Baseline: tombstones WITHOUT reuse — the [7,14] design point.
+
+Gao-Groote-Hesselink (2005) and Maier-Sanders-Dementiev (2019) mark deleted
+cells with tombstones that inserts may NOT claim (or may claim only for the
+same key).  This keeps synchronization simple and needs no per-cell metadata
+beyond the paper's two bits, but tombstones accumulate: table *occupancy*
+(keys + tombstones) grows monotonically with churn, and once it reaches m the
+table must be rebuilt even though the number of live keys is far below m.
+
+The paper's contribution is exactly removing this rebuild requirement while
+keeping bounded metadata.  ``bench_reuse`` measures the difference: sustained
+insert/delete churn at a fixed live-key working set.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core import batched as BT
+from repro.core import encoding as E
+
+create = BT.create
+lookup_batch = BT.lookup_batch
+delete_batch = BT.delete_batch
+
+
+def insert_batch(ht: BT.HashTable, keys,
+                 active=None) -> Tuple[BT.HashTable, jnp.ndarray]:
+    """Insert claiming only EMPTY cells (no tombstone reuse)."""
+    return BT.insert_batch(ht, keys, active=active, claim_tombstones=False)
+
+
+def needs_rebuild(ht: BT.HashTable, slack: float = 0.95) -> jnp.ndarray:
+    """True when occupancy (keys + tombstones) nears capacity; at that point
+    inserts start ABORTing even if few live keys remain."""
+    return BT.occupancy(ht) >= slack
+
+
+def rebuild(ht: BT.HashTable, new_m: int | None = None) -> BT.HashTable:
+    """Rebuild into a fresh table (drops tombstones); this is the periodic
+    cost the paper's reuse scheme avoids."""
+    return BT.rebuild(ht, new_m or BT.size(ht))

@@ -1,0 +1,280 @@
+"""TPU-native batched linear-probing hash table.
+
+This is the production-path adaptation of the paper's algorithm (DESIGN.md
+§2).  On TPU the ``n`` asynchronous processes of the paper become the ``B``
+lanes of a batch; per-word CAS becomes **scatter-min priority arbitration**
+(optimistic claim / check-who-won / retry — the same optimistic-concurrency
+structure, data-parallel and deterministic); and the paper's probe-order
+priority rule resolves duplicate keys inside a batch exactly as it resolves
+concurrent same-key inserts.  Tombstone reuse — the paper's space-efficiency
+headline — carries over unchanged: inserts claim EMPTY *or* TOMBSTONE cells,
+so the table never needs rebuilding while #keys <= m (Proposition 2 analog).
+
+Between batch applications the table is *quiescent*: cells hold only
+``<v, final>`` / EMPTY / TOMBSTONE.  The tentative/validate life cycle of the
+paper materializes inside ``insert_batch``'s arbitration rounds (claims that
+lose a round are withdrawn — the batched analog of COLLIDED/withdraw).
+The resulting table state equals a sequential execution of SOME serialization
+of the batch (the paper's Proposition 20: the specific effective insertion
+schedule is irrelevant to the run-length distribution), and the *returns*
+match the by-batch-index serialization exactly.
+
+Semantics: ``apply_batch`` linearizes a mixed batch as
+    all deletes (by batch index) < all inserts (by batch index) < all lookups
+which is one valid serialization.
+
+Wait-free lookups are pure vectorized reads (no lane ever retries because of
+another lane's writes) — ``kernels/probe`` provides the Pallas VMEM-tiled
+version; this module is its jnp oracle and the general-purpose path.
+
+Keys must lie in ``[0, encoding.MAX_KEY)``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding as E
+from repro.core import hashing as H
+
+PROBE_CHUNK = 8  # cells fetched per probe round in the jnp path
+
+
+class HashTable(NamedTuple):
+    """Quiescent table state (a pytree; all ops are functional)."""
+    table: jnp.ndarray      # uint32[m]: enc_final(key) / EMPTY / TOMBSTONE
+    num_keys: jnp.ndarray   # int32: live keys
+    num_tombs: jnp.ndarray  # int32: tombstones
+    seed: jnp.ndarray       # int32: hash seed
+
+
+def create(m: int, seed: int = 0) -> HashTable:
+    return HashTable(
+        table=jnp.full((m,), E.EMPTY, dtype=jnp.uint32),
+        num_keys=jnp.int32(0),
+        num_tombs=jnp.int32(0),
+        seed=jnp.int32(seed),
+    )
+
+
+def size(ht: HashTable) -> int:
+    return ht.table.shape[0]
+
+
+def _hash(ht: HashTable, keys):
+    # fold the (traced) seed into the key stream
+    mix = ht.seed.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    return H.hash_keys(jnp.asarray(keys, jnp.uint32) ^ mix, size(ht), 0)
+
+
+def _active_mask(B, active):
+    if active is None:
+        return jnp.ones((B,), bool)
+    return jnp.asarray(active, bool)
+
+
+# ---------------------------------------------------------------------------
+# Lookup — wait-free, read-only.
+
+def find_batch(ht: HashTable, keys,
+               active=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (found bool[B], slot int32[B]) — slot of <key, final>, or -1.
+
+    Scans each key's run in PROBE_CHUNK-cell windows until the key or an
+    EMPTY cell (end of run) is found.
+    """
+    keys = jnp.asarray(keys, dtype=jnp.uint32)
+    m = size(ht)
+    B = keys.shape[0]
+    act = _active_mask(B, active)
+    hv = _hash(ht, keys)
+    target = (keys << 2) | E.TAG_FINAL
+
+    max_rounds = (m + PROBE_CHUNK - 1) // PROBE_CHUNK
+    woff = jnp.arange(PROBE_CHUNK, dtype=jnp.int32)
+
+    def cond(st):
+        step, scanning, found, slot = st
+        return jnp.any(scanning) & (step < max_rounds)
+
+    def body(st):
+        step, scanning, found, slot = st
+        pos = jnp.mod(hv[:, None] + step * PROBE_CHUNK + woff[None, :], m)
+        vals = ht.table[pos]                            # [B, W]
+        hit = vals == target[:, None]
+        empty = vals == jnp.uint32(E.EMPTY)
+        hit_any = jnp.any(hit, axis=1)
+        empty_any = jnp.any(empty, axis=1)
+        hit_first = jnp.argmax(hit, axis=1)
+        empty_first = jnp.argmax(empty, axis=1)
+        hit_valid = hit_any & (~empty_any | (hit_first <= empty_first))
+        new_found = found | (scanning & hit_valid)
+        new_slot = jnp.where(scanning & hit_valid,
+                             jnp.take_along_axis(pos, hit_first[:, None],
+                                                 axis=1)[:, 0], slot)
+        new_scanning = scanning & ~hit_valid & ~empty_any
+        return step + 1, new_scanning, new_found, new_slot
+
+    st0 = (jnp.int32(0), act, jnp.zeros((B,), bool),
+           jnp.full((B,), -1, jnp.int32))
+    _, _, found, slot = jax.lax.while_loop(cond, body, st0)
+    return found, slot
+
+
+def lookup_batch(ht: HashTable, keys, active=None) -> jnp.ndarray:
+    """Wait-free batched lookup: present?"""
+    found, _ = find_batch(ht, keys, active)
+    return found
+
+
+# ---------------------------------------------------------------------------
+# Insert — scatter-min arbitration rounds (the batched CAS analog).
+
+def _dedup_leaders(keys, act) -> jnp.ndarray:
+    """leader[b] = is b the first *active* occurrence of keys[b]?"""
+    B = keys.shape[0]
+    eq = keys[None, :] == keys[:, None]               # [i, j]
+    earlier = jnp.tril(jnp.ones((B, B), bool), k=-1)  # j < i
+    dup_of_earlier = jnp.any(eq & earlier & act[None, :], axis=1)
+    return ~dup_of_earlier & act
+
+
+def insert_batch(ht: HashTable, keys, active=None,
+                 claim_tombstones: bool = True) -> Tuple[HashTable, jnp.ndarray]:
+    """Insert a batch; ret int32[B]: 1=true (inserted), 0=false (present or
+    duplicate-in-batch or inactive), 2=ABORT (no available cell).
+
+    ``claim_tombstones=False`` reproduces the no-reuse behaviour of [7,14]
+    (Gao et al. / Maier et al.): tombstones accumulate and only EMPTY cells
+    are claimable — the baseline the paper improves on (see
+    core/baselines/gao_noreuse.py and the ``bench_reuse`` benchmark)."""
+    keys = jnp.asarray(keys, dtype=jnp.uint32)
+    m = size(ht)
+    B = keys.shape[0]
+    act = _active_mask(B, active)
+    hv = _hash(ht, keys)
+    leader = _dedup_leaders(keys, act)
+    present, _ = find_batch(ht, keys, act)
+
+    pri = jnp.arange(B, dtype=jnp.int32)
+
+    def cond(st):
+        table, cursor, pending, placed, aborted, tombs_used = st
+        return jnp.any(pending)
+
+    def body(st):
+        table, cursor, pending, placed, aborted, tombs_used = st
+        cand = jnp.mod(hv + cursor, m)
+        if claim_tombstones:
+            avail = E.is_available(table[cand]) & pending
+        else:
+            avail = (table[cand] == jnp.uint32(E.EMPTY)) & pending
+        # claim: lowest batch index wins each contested cell
+        claim_idx = jnp.where(avail, cand, m)  # OOB -> dropped
+        claims = jnp.full((m,), B, jnp.int32).at[claim_idx].min(
+            pri, mode="drop")
+        won = avail & (claims[cand] == pri)
+        was_tomb = won & (table[cand] == jnp.uint32(E.TOMBSTONE))
+        write_idx = jnp.where(won, cand, m)
+        table = table.at[write_idx].set((keys << 2) | E.TAG_FINAL,
+                                        mode="drop")
+        tombs_used = tombs_used + jnp.sum(was_tomb)
+        placed = placed | won
+        # losers / occupied cells: advance cursor; full cycle -> ABORT
+        adv = pending & ~won
+        cursor = jnp.where(adv, cursor + 1, cursor)
+        ab = adv & (cursor >= m)
+        aborted = aborted | ab
+        pending = pending & ~won & ~ab
+        return table, cursor, pending, placed, aborted, tombs_used
+
+    st0 = (ht.table, jnp.zeros((B,), jnp.int32), leader & ~present,
+           jnp.zeros((B,), bool), jnp.zeros((B,), bool), jnp.int32(0))
+    table, _, _, placed, aborted, tombs_used = jax.lax.while_loop(
+        cond, body, st0)
+
+    ret = jnp.zeros((B,), jnp.int32)
+    ret = jnp.where(placed, 1, ret)
+    ret = jnp.where(aborted, 2, ret)
+    # a non-leader duplicate of an aborted leader also aborts (sequentially
+    # the leader ran first and the table is still full, key still absent)
+    eq = keys[None, :] == keys[:, None]
+    earlier = jnp.tril(jnp.ones((B, B), bool), k=-1)
+    leader_aborted = jnp.any(eq & earlier & aborted[None, :], axis=1)
+    ret = jnp.where(act & ~leader & ~present & leader_aborted, 2, ret)
+
+    ht2 = ht._replace(table=table,
+                      num_keys=ht.num_keys + jnp.sum(placed),
+                      num_tombs=ht.num_tombs - tombs_used)
+    return ht2, ret
+
+
+# ---------------------------------------------------------------------------
+# Delete — find + tombstone.
+
+def delete_batch(ht: HashTable, keys,
+                 active=None) -> Tuple[HashTable, jnp.ndarray]:
+    keys = jnp.asarray(keys, dtype=jnp.uint32)
+    m = size(ht)
+    B = keys.shape[0]
+    act = _active_mask(B, active)
+    found, slot = find_batch(ht, keys, act)
+    leader = _dedup_leaders(keys, act)
+    win = found & leader
+    idx = jnp.where(win, slot, m)
+    table = ht.table.at[idx].set(jnp.uint32(E.TOMBSTONE), mode="drop")
+    ret = win.astype(jnp.int32)
+    ht2 = ht._replace(table=table,
+                      num_keys=ht.num_keys - jnp.sum(win),
+                      num_tombs=ht.num_tombs + jnp.sum(win))
+    return ht2, ret
+
+
+# ---------------------------------------------------------------------------
+# Mixed batch + maintenance.
+
+def apply_batch(ht: HashTable, ops, keys):
+    """ops int32[B] (spec.OP_*), keys uint32[B].  Linearization order:
+    deletes < inserts < lookups (each group by batch index).
+    Returns (ht', ret int32[B])."""
+    from repro.core.spec import OP_DELETE, OP_INSERT
+    ops = jnp.asarray(ops, jnp.int32)
+    keys = jnp.asarray(keys, jnp.uint32)
+    ht, del_ret = delete_batch(ht, keys, active=(ops == OP_DELETE))
+    ht, ins_ret = insert_batch(ht, keys, active=(ops == OP_INSERT))
+    look_ret = lookup_batch(ht, keys).astype(jnp.int32)
+    ret = jnp.where(ops == OP_DELETE, del_ret,
+                    jnp.where(ops == OP_INSERT, ins_ret, look_ret))
+    return ht, ret
+
+
+def load_factor(ht: HashTable):
+    return ht.num_keys / size(ht)
+
+
+def occupancy(ht: HashTable):
+    """Fraction of non-EMPTY cells (keys + tombstones) — what forces rebuilds
+    in no-reuse designs."""
+    return (ht.num_keys + ht.num_tombs) / size(ht)
+
+
+def live_keys(ht: HashTable) -> jnp.ndarray:
+    """uint32[m] array: live keys packed first, padded with MAX_KEY."""
+    is_key = E.dec_key(ht.table) != jnp.uint32(E.RESERVED_KEY)
+    keys = jnp.where(is_key, E.dec_key(ht.table), jnp.uint32(E.MAX_KEY))
+    order = jnp.argsort(~is_key, stable=True)
+    return keys[order], jnp.sum(is_key)
+
+
+def rebuild(ht: HashTable, new_m: int,
+            new_seed: Optional[int] = None) -> HashTable:
+    """Resize/rebuild (Section 4.3: triggered by ABORTs; standard technique,
+    orthogonal to the lock-free algorithm itself)."""
+    keys_sorted, n_live = live_keys(ht)
+    fresh = create(new_m, int(ht.seed) if new_seed is None else new_seed)
+    m = size(ht)
+    fresh, _ = insert_batch(fresh, keys_sorted,
+                            active=(jnp.arange(m) < n_live))
+    return fresh

@@ -1,0 +1,167 @@
+"""Cell encoding for the lock-free linear-probing hash table.
+
+Implements the bit-level layout from the paper (Section 4.2):
+
+* Each cell stores a *tagged key* ``<v, tag>`` with ``tag in {tentative, final,
+  revalidate}``, or one of four key-less states ``EMPTY / TOMBSTONE / DELETED /
+  COLLIDED``.  Using the two tag bits, **one reserved sentinel key value** is
+  sufficient to encode the four key-less states, giving ``ceil(log(U+1)) + 2``
+  bits per cell for the LL/SC version (Theorem 1).
+* The CAS version adds a *marked* state ``<<v, j>, marked>`` carrying the index
+  of the cell (or process) that claimed provisional ownership — an extra
+  ``min(ceil(log m), ceil(log n))`` bits.
+
+Concretely we pack ``cell = (key << 2) | tag`` into a uint32 (keys are at most
+28 bits in this build; the key domain size ``U`` is configurable for the space
+accounting below, which is analytic and independent of the carrier dtype).
+The CAS owner field is carried in a parallel int32 array by the simulator; the
+logical cell is the pair, and all simulated atomic events cover both words
+(see DESIGN.md §2 — this is a simulation artifact, not an algorithm change).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Tags (2 bits).
+TAG_TENTATIVE = 0
+TAG_FINAL = 1
+TAG_REVALIDATE = 2
+TAG_SPECIAL = 3  # key == RESERVED: one of the 4 key-less states.
+                 # key != RESERVED: CAS-version ``marked`` state.
+
+KEY_BITS = 28
+RESERVED_KEY = (1 << KEY_BITS) - 1  # sentinel key value
+MAX_KEY = RESERVED_KEY - 1          # usable key domain [0, MAX_KEY]
+
+# Key-less states: <RESERVED, tag> reinterprets the tag bits as a selector.
+# EMPTY must be tag 0 so that a zero-filled... (we keep explicit constants).
+EMPTY = (RESERVED_KEY << 2) | 0
+TOMBSTONE = (RESERVED_KEY << 2) | 1
+DELETED = (RESERVED_KEY << 2) | 2
+COLLIDED = (RESERVED_KEY << 2) | 3
+
+NO_OWNER = -1
+
+
+def enc(key, tag):
+    """Encode ``<key, tag>`` into a uint32 cell word."""
+    return jnp.uint32((jnp.uint32(key) << 2) | jnp.uint32(tag))
+
+
+def enc_tentative(key):
+    return enc(key, TAG_TENTATIVE)
+
+
+def enc_final(key):
+    return enc(key, TAG_FINAL)
+
+
+def enc_revalidate(key):
+    return enc(key, TAG_REVALIDATE)
+
+
+def enc_marked(key):
+    """CAS-version marked word; the owner index lives in the parallel array."""
+    return enc(key, TAG_SPECIAL)
+
+
+def dec_key(cell):
+    """The key field of a cell word (== RESERVED_KEY for key-less states)."""
+    return jnp.uint32(cell) >> 2
+
+
+def dec_tag(cell):
+    return jnp.uint32(cell) & 3
+
+
+def val(cell):
+    """The paper's ``val(x)``: the key stored in ``x`` or RESERVED_KEY (⊥)."""
+    return dec_key(cell)
+
+
+def has_key(cell, key):
+    """Does this cell *contain the key* ``key`` (tentative/final/revalidate/
+    marked — Section 5.1's definition)?"""
+    return dec_key(cell) == jnp.uint32(key)
+
+
+def is_available(cell):
+    """EMPTY or TOMBSTONE — claimable by an insert (Algorithm 3, line 43)."""
+    c = jnp.uint32(cell)
+    return (c == jnp.uint32(EMPTY)) | (c == jnp.uint32(TOMBSTONE))
+
+
+def is_marked(cell):
+    c = jnp.uint32(cell)
+    return (dec_tag(c) == TAG_SPECIAL) & (dec_key(c) != jnp.uint32(RESERVED_KEY))
+
+
+def restart(cell):
+    """The paper's ``restart(x)``: owner should re-validate — true iff
+    ``x == <v, revalidate>`` or (CAS) ``x == <<v,*>, marked>``."""
+    c = jnp.uint32(cell)
+    is_key = dec_key(c) != jnp.uint32(RESERVED_KEY)
+    tag = dec_tag(c)
+    return is_key & ((tag == TAG_REVALIDATE) | (tag == TAG_SPECIAL))
+
+
+# ---------------------------------------------------------------------------
+# Space accounting — Theorem 1 / Table 1.
+
+class CellSize(NamedTuple):
+    key_bits: int        # ceil(log2(U + 1)) — key + one reserved sentinel
+    tag_bits: int        # always 2
+    owner_bits: int      # 0 for LL/SC; min(ceil(log m), ceil(log n)) for CAS
+    total: int
+
+
+def _clog2(x: int) -> int:
+    return max(1, math.ceil(math.log2(x)))
+
+
+def cell_size_llsc(U: int) -> CellSize:
+    """LL/SC version: ceil(log(U+1)) + 2 bits (Theorem 1)."""
+    kb = _clog2(U + 1)
+    return CellSize(kb, 2, 0, kb + 2)
+
+
+def cell_size_cas(U: int, n: int, m: int) -> CellSize:
+    """CAS version: + min(ceil(log m), ceil(log n)) owner bits (Theorem 1)."""
+    kb = _clog2(U + 1)
+    ob = min(_clog2(m), _clog2(n))
+    return CellSize(kb, 2, ob, kb + 2 + ob)
+
+
+def table_bits_llsc(U: int, m: int) -> int:
+    """Total table footprint, LL/SC version: m * (ceil(log(U+1)) + 2)."""
+    return m * cell_size_llsc(U).total
+
+
+def table_bits_cas(U: int, n: int, m: int) -> int:
+    return m * cell_size_cas(U, n, m).total
+
+
+# Prior-work cell sizes (Table 1), for the space benchmark.
+def cell_size_gao(U: int) -> int:
+    """[7,14]: tombstones, no reuse: ceil(log U + 2) bits."""
+    return _clog2(U) + 2
+
+
+def cell_size_robinhood(U: int) -> int:
+    """[3]: 2 * ceil(log U + 1) + 2 bits (two keys per cell)."""
+    return 2 * (_clog2(U) + 1) + 2
+
+
+def cell_size_shun_blelloch(U: int) -> int:
+    """[20]: ceil(log U + 1) bits (phase-concurrent only)."""
+    return _clog2(U) + 1
+
+
+def cell_size_purcell_harris_lower_bound(U: int, timestamp_bits: int = 64) -> int:
+    """[18]: probe bounds + unbounded timestamps; any finite run needs at
+    least key + probe-bound + 2 timestamps of ``timestamp_bits``."""
+    return _clog2(U) + 2 * timestamp_bits + 8

@@ -1,0 +1,53 @@
+"""Hash functions for the linear-probing table.
+
+Multiply-shift hashing (Dietzfelbinger et al.): ``h(v) = (v * A mod 2^32) >>
+(32 - k)`` for a table of size ``m = 2^k`` and odd seed-derived multiplier
+``A``.  This is the standard cheap family whose behaviour on random keys
+matches the uniform-hashing assumption of Knuth's O(x^2) analysis closely
+enough for the step-complexity experiments; the algorithm itself is oblivious
+to the hash family.
+
+For non-power-of-two ``m`` we fall back to Fibonacci multiplicative hashing
+followed by a modulo; the simulator supports arbitrary ``m`` (the paper's
+modular arithmetic wraps at m).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+FIB32 = 2654435769  # 2^32 / phi, odd
+
+
+def derive_multiplier(seed: int) -> int:
+    """Derive an odd 32-bit multiplier from a seed (splitmix-style)."""
+    z = (seed + 0x9E3779B9) & 0xFFFFFFFF
+    z = (z ^ (z >> 16)) * 0x85EBCA6B & 0xFFFFFFFF
+    z = (z ^ (z >> 13)) * 0xC2B2AE35 & 0xFFFFFFFF
+    z = z ^ (z >> 16)
+    return (z | 1) & 0xFFFFFFFF
+
+
+def is_pow2(m: int) -> bool:
+    return m > 0 and (m & (m - 1)) == 0
+
+
+def hash_keys(keys, m: int, seed: int = 0):
+    """Vectorized h(v) in [0, m). ``keys``: uint32 array or scalar."""
+    A = jnp.uint32(derive_multiplier(seed))
+    x = jnp.uint32(keys) * A
+    if is_pow2(m):
+        k = int(np.log2(m))
+        if k == 0:
+            return jnp.zeros_like(x, dtype=jnp.int32)
+        return (x >> jnp.uint32(32 - k)).astype(jnp.int32)
+    # general m: multiply-shift to 16 bits then scale (avoids 64-bit ops)
+    hi = (x >> 16).astype(jnp.uint32)
+    return ((hi * jnp.uint32(m)) >> 16).astype(jnp.int32)
+
+
+def probe_distance(idx, start, m: int):
+    """Distance of ``idx`` from ``start`` along the probe sequence (mod m) —
+    the paper's ``i - h(v)`` with wraparound."""
+    d = jnp.int32(idx) - jnp.int32(start)
+    return jnp.where(d < 0, d + m, d)

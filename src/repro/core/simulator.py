@@ -1,0 +1,722 @@
+"""Faithful executable specification of the paper's Algorithms 1-6.
+
+Every process's program (lookup / insert / delete, in both the LL/SC and the
+CAS variant) is hand-compiled into a *memory-operation-site* state machine:
+each site performs exactly one shared-memory primitive (the paper's model —
+"each step consists of some local computation, followed by a single primitive
+operation on the shared memory"), and the post-logic of the site folds all
+local computation up to the next primitive.
+
+The interpreter is written in pure ``jax.numpy`` select-style transitions, so
+the same code runs eagerly (oracle / debugging) and under ``jit`` + ``vmap``
+(thousands of random schedules in parallel — the data-parallel way a SIMD
+machine executes an asynchronous algorithm).
+
+Site map (pseudocode line numbers refer to the paper):
+
+  FS_READ        Alg.1 l.2/11    Read(table[i])        forward scan
+  BS_READ        Alg.1 l.16      Read(table[i])        backward scan
+  VC_MOD         Alg.4 l.93      Modify(i, val -> <v,revalidate>)
+  VC_READ        Alg.4 l.94      plain read table[i]
+  TD_MOD_TOMB    Alg.4 l.86      Modify(i, <v,final> -> TOMBSTONE)
+  TD_MOD_DEL     Alg.4 l.88      Modify(i, val -> DELETED)
+  TD_READ        Alg.4 l.89      Read(table[i])
+  I_READ_CLAIM   Alg.3 l.41/46   Read(table[j])        claim loop
+  I_MOD_CLAIM    Alg.3 l.43      Modify(j, val -> <v,tentative>)
+  I_READ_SCAN    Alg.3 l.48/65   Read(table[i])        duplicate scan
+  I_READ_OWN     Alg.3 l.66      Read(table[j])
+  I_MOD_FINAL    Alg.3 l.67      Modify(j, cur -> <v,final>)
+  I_MOD_RESTART  Alg.3 l.58/69   Modify(j, cur -> <v,tentative>)
+  I_READ_OWN2    Alg.3 l.57      Read(table[j])
+  DC_READ        Alg.4 l.76      Read(table[j])        del_copy
+  DC_MOD_REVAL   Alg.4 l.78      Modify(j, <v,reval> -> <v,tentative>)
+  DC_READ2       Alg.4 l.79      Read(table[j])
+  DC_MOD_TOMB    Alg.4 l.80      Modify(j, val -> TOMBSTONE)
+  -- LL/SC del_other_copy (Alg.5):
+  DOC_READ_OWN   l.102           plain read table[j]
+  DOC_SC         l.104           SC(table[i], COLLIDED)
+  DOC_READ_I     l.105           plain read table[i]
+  -- CAS del_other_copy (Alg.6):
+  DOC_CAS_MARK   l.116           CAS(table[i], val -> <<v,j>,marked>)
+  DOC_READ_I2    l.117           plain read table[i]
+  DOC_READ_OWN_C l.120           plain read table[j]
+  DOC_CAS_COLL   l.122           CAS(table[i], marked -> COLLIDED)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoding as E
+from repro.core import hashing as H
+from repro.core.spec import (OP_DELETE, OP_INSERT, OP_LOOKUP, OP_NONE,
+                             RET_ABORT, RET_FALSE, RET_PENDING, RET_TRUE)
+
+# ---------------------------------------------------------------------------
+# Sites.
+FS_READ = 0
+BS_READ = 1
+VC_MOD = 2
+VC_READ = 3
+TD_MOD_TOMB = 4
+TD_MOD_DEL = 5
+TD_READ = 6
+I_READ_CLAIM = 7
+I_MOD_CLAIM = 8
+I_READ_SCAN = 9
+I_READ_OWN = 10
+I_MOD_FINAL = 11
+I_MOD_RESTART = 12
+I_READ_OWN2 = 13
+DC_READ = 14
+DC_MOD_REVAL = 15
+DC_READ2 = 16
+DC_MOD_TOMB = 17
+DOC_READ_OWN = 18
+DOC_SC = 19
+DOC_READ_I = 20
+DOC_CAS_MARK = 21
+DOC_READ_I2 = 22
+DOC_READ_OWN_C = 23
+DOC_CAS_COLL = 24
+HALT = 25
+NUM_SITES = 26
+
+CONT_FS = 0
+CONT_BS = 1
+
+# memop kinds
+MEM_NONE = 0
+MEM_READ_KW = 1    # the paper's Read keyword: LL (llsc) / plain read (cas)
+MEM_MODIFY = 2     # the paper's Modify keyword: SC (llsc) / CAS (cas)
+MEM_PLAIN_READ = 3
+MEM_SC = 4         # explicit SC (Alg.5 l.104)
+MEM_CAS = 5        # explicit CAS (Alg.6)
+
+MODE_LLSC = "llsc"
+MODE_CAS = "cas"
+
+
+class Regs(NamedTuple):
+    pc: jnp.ndarray        # int32[P]
+    opidx: jnp.ndarray     # int32[P]
+    v: jnp.ndarray         # uint32[P]
+    hv: jnp.ndarray        # int32[P]
+    i: jnp.ndarray         # int32[P]
+    j: jnp.ndarray         # int32[P]
+    val: jnp.ndarray       # uint32[P]
+    val_o: jnp.ndarray     # int32[P]
+    cur: jnp.ndarray       # uint32[P]
+    cur_o: jnp.ndarray     # int32[P]
+    cont: jnp.ndarray      # int32[P]
+    ll_cell: jnp.ndarray   # int32[P]
+    ll_ver: jnp.ndarray    # int32[P]
+    fresh: jnp.ndarray     # int32[P]
+    op: jnp.ndarray        # int32[P] current op type
+
+
+class SimState(NamedTuple):
+    table: jnp.ndarray     # uint32[m]
+    owner: jnp.ndarray     # int32[m]   (CAS marked owner; NO_OWNER otherwise)
+    ver: jnp.ndarray       # int32[m]   (write counter, simulates LL/SC validity)
+    regs: Regs
+    results: jnp.ndarray   # int32[P,K]
+    t_inv: jnp.ndarray     # int32[P,K]
+    t_rsp: jnp.ndarray     # int32[P,K]
+    steps: jnp.ndarray     # int32[P,K] memops consumed per op
+    t: jnp.ndarray         # int32 global event counter
+    pair_ok: jnp.ndarray   # bool — LL/SC proper-pairing assertion
+    inv_ok: jnp.ndarray    # bool — Lemma 4 + Prop 3 monitors (if enabled)
+
+
+# ---------------------------------------------------------------------------
+# Helpers building register updates (scalar view of one process).
+
+class PRegs(NamedTuple):
+    pc: jnp.ndarray
+    opidx: jnp.ndarray
+    v: jnp.ndarray
+    hv: jnp.ndarray
+    i: jnp.ndarray
+    j: jnp.ndarray
+    val: jnp.ndarray
+    val_o: jnp.ndarray
+    cur: jnp.ndarray
+    cur_o: jnp.ndarray
+    cont: jnp.ndarray
+    ll_cell: jnp.ndarray
+    ll_ver: jnp.ndarray
+    fresh: jnp.ndarray
+    op: jnp.ndarray
+    # transition outputs:
+    complete: jnp.ndarray  # int32 0/1
+    retval: jnp.ndarray    # int32
+
+
+def _mk(r: PRegs, **kw) -> PRegs:
+    return r._replace(**{k: _cast(r, k, v) for k, v in kw.items()})
+
+
+def _cast(r, k, v):
+    ref = getattr(r, k)
+    return jnp.asarray(v).astype(ref.dtype)
+
+
+def _where_regs(c, a: PRegs, b: PRegs) -> PRegs:
+    return PRegs(*[jnp.where(c, x, y) for x, y in zip(a, b)])
+
+
+def _select_regs(cs, rs, default: PRegs) -> PRegs:
+    out = default
+    # apply in reverse so earlier conditions win
+    for c, r in zip(reversed(cs), reversed(rs)):
+        out = _where_regs(c, r, out)
+    return out
+
+
+def _complete(r: PRegs, ret) -> PRegs:
+    return _mk(r, complete=1, retval=ret, pc=HALT)
+
+
+# --- scan-resumption helpers -------------------------------------------------
+
+def _enter_bs(r: PRegs, idx) -> PRegs:
+    return _mk(r, cont=CONT_BS, i=idx, pc=BS_READ)
+
+
+def _after_bs(r: PRegs) -> PRegs:
+    """backward_scan returned ⊥ (back at h(v)) — dispatch per op type."""
+    is_ins = r.op == OP_INSERT
+    ins = _mk(r, j=r.hv, pc=I_READ_CLAIM)
+    done = _complete(r, RET_FALSE)
+    return _where_regs(is_ins, ins, done)
+
+
+def _resume_scan(r: PRegs, m: int) -> PRegs:
+    """Helper (validate_copy/try_delete) said "not found, keep scanning"."""
+    # forward: i+=1; if i==hv: break -> bs starts at i-1 (mod m)
+    i2 = jnp.mod(r.i + 1, m)
+    fs_wrap = _enter_bs(r, jnp.mod(r.hv - 1 + m, m))
+    fs_go = _mk(r, i=i2, pc=FS_READ)
+    fs = _where_regs(i2 == r.hv, fs_wrap, fs_go)
+    # backward: if i==hv: return ⊥; else i-=1
+    bs_done = _after_bs(r)
+    bs_go = _mk(r, i=jnp.mod(r.i - 1 + m, m), pc=BS_READ)
+    bs = _where_regs(r.i == r.hv, bs_done, bs_go)
+    return _where_regs(r.cont == CONT_FS, fs, bs)
+
+
+def _scan_found_true(r: PRegs) -> PRegs:
+    """forward/backward scan "found the key" (validate_copy true):
+    lookup returns true, insert returns false."""
+    ret = jnp.where(r.op == OP_LOOKUP, RET_TRUE, RET_FALSE)
+    return _complete(r, ret)
+
+
+def _vc_entry(r: PRegs, rval, ro) -> PRegs:
+    """validate_copy(v, val, i) local prefix (Alg.4 l.92): called with the
+    freshly read val; caller is insert/lookup during a scan."""
+    fin = rval == E.enc_final(r.v)
+    rev = rval == E.enc_revalidate(r.v)
+    hit = fin | rev
+    go_mod = _mk(r, val=rval, val_o=ro, pc=VC_MOD)
+    return _where_regs(hit, _scan_found_true(r), go_mod)
+
+
+def _td_entry(r: PRegs, rval, ro) -> PRegs:
+    """try_delete local prefix (Alg.4 l.84-88), val freshly read, contains v."""
+    fin = rval == E.enc_final(r.v)
+    tomb = _mk(r, val=rval, val_o=ro, pc=TD_MOD_TOMB)
+    dele = _mk(r, val=rval, val_o=ro, pc=TD_MOD_DEL)
+    return _where_regs(fin, tomb, dele)
+
+
+def _advance_dedup(r: PRegs, m: int) -> PRegs:
+    """dedup scan: i+=1; full cycle -> finalize own copy (l.63-66)."""
+    i2 = jnp.mod(r.i + 1, m)
+    own = _mk(r, pc=I_READ_OWN)
+    go = _mk(r, i=i2, pc=I_READ_SCAN)
+    return _where_regs(i2 == r.hv, own, go)
+
+
+# ---------------------------------------------------------------------------
+# The per-site memop specification.
+
+def memop_spec(r: PRegs, mode: str):
+    """Return (kind, cell, oldv, oldo, newv, newo) for the process's pc."""
+    pc = r.pc
+    u32 = lambda x: jnp.uint32(x)
+    kinds = jnp.array([
+        MEM_READ_KW,   # FS_READ
+        MEM_READ_KW,   # BS_READ
+        MEM_MODIFY,    # VC_MOD
+        MEM_PLAIN_READ,# VC_READ
+        MEM_MODIFY,    # TD_MOD_TOMB
+        MEM_MODIFY,    # TD_MOD_DEL
+        MEM_READ_KW,   # TD_READ
+        MEM_READ_KW,   # I_READ_CLAIM
+        MEM_MODIFY,    # I_MOD_CLAIM
+        MEM_READ_KW,   # I_READ_SCAN
+        MEM_READ_KW,   # I_READ_OWN
+        MEM_MODIFY,    # I_MOD_FINAL
+        MEM_MODIFY,    # I_MOD_RESTART
+        MEM_READ_KW,   # I_READ_OWN2
+        MEM_READ_KW,   # DC_READ
+        MEM_MODIFY,    # DC_MOD_REVAL
+        MEM_READ_KW,   # DC_READ2
+        MEM_MODIFY,    # DC_MOD_TOMB
+        MEM_PLAIN_READ,# DOC_READ_OWN
+        MEM_SC,        # DOC_SC
+        MEM_PLAIN_READ,# DOC_READ_I
+        MEM_CAS,       # DOC_CAS_MARK
+        MEM_PLAIN_READ,# DOC_READ_I2
+        MEM_PLAIN_READ,# DOC_READ_OWN_C
+        MEM_CAS,       # DOC_CAS_COLL
+        MEM_NONE,      # HALT
+    ], dtype=jnp.int32)
+    kind = kinds[pc]
+
+    # cell: sites on table[i] vs table[j]
+    on_j = jnp.isin(pc, jnp.array([I_READ_CLAIM, I_MOD_CLAIM, I_READ_OWN,
+                                   I_MOD_FINAL, I_MOD_RESTART, I_READ_OWN2,
+                                   DC_READ, DC_MOD_REVAL, DC_READ2,
+                                   DC_MOD_TOMB, DOC_READ_OWN, DOC_READ_OWN_C]))
+    cell = jnp.where(on_j, r.j, r.i)
+
+    # old value for Modify/CAS sites: val-based or cur-based
+    old_from_cur = jnp.isin(pc, jnp.array([I_MOD_FINAL, I_MOD_RESTART]))
+    oldv = jnp.where(old_from_cur, r.cur, r.val)
+    oldo = jnp.where(old_from_cur, r.cur_o, r.val_o)
+    # DOC_CAS_COLL: old = <<v,j>,marked>
+    oldv = jnp.where(pc == DOC_CAS_COLL, E.enc_marked(r.v), oldv)
+    oldo = jnp.where(pc == DOC_CAS_COLL, r.j, oldo)
+
+    # new value per site
+    newv = u32(E.EMPTY)
+    newv = jnp.where(pc == VC_MOD, E.enc_revalidate(r.v), newv)
+    newv = jnp.where(pc == TD_MOD_TOMB, u32(E.TOMBSTONE), newv)
+    newv = jnp.where(pc == TD_MOD_DEL, u32(E.DELETED), newv)
+    newv = jnp.where(pc == I_MOD_CLAIM, E.enc_tentative(r.v), newv)
+    newv = jnp.where(pc == I_MOD_FINAL, E.enc_final(r.v), newv)
+    newv = jnp.where(pc == I_MOD_RESTART, E.enc_tentative(r.v), newv)
+    newv = jnp.where(pc == DC_MOD_REVAL, E.enc_tentative(r.v), newv)
+    newv = jnp.where(pc == DC_MOD_TOMB, u32(E.TOMBSTONE), newv)
+    newv = jnp.where(pc == DOC_SC, u32(E.COLLIDED), newv)
+    newv = jnp.where(pc == DOC_CAS_MARK, E.enc_marked(r.v), newv)
+    newv = jnp.where(pc == DOC_CAS_COLL, u32(E.COLLIDED), newv)
+    newo = jnp.where(pc == DOC_CAS_MARK, r.j, jnp.int32(E.NO_OWNER))
+    return kind, cell, oldv, oldo, newv, newo
+
+
+def exec_memop(table, owner, ver, r: PRegs, kind, cell, oldv, oldo, newv,
+               newo, mode: str):
+    """Execute the memory primitive; returns (rval, ro, success, table, owner,
+    ver, ll_cell, ll_ver, pair_ok_delta)."""
+    cur_v = table[cell]
+    cur_o = owner[cell]
+    cur_ver = ver[cell]
+
+    is_read_kw = kind == MEM_READ_KW
+    is_plain = kind == MEM_PLAIN_READ
+    is_mod = kind == MEM_MODIFY
+    is_sc_site = kind == MEM_SC
+    is_cas_site = kind == MEM_CAS
+
+    if mode == MODE_LLSC:
+        # Read keyword = LL; Modify keyword = SC; explicit SC site too.
+        do_ll = is_read_kw
+        do_sc = is_mod | is_sc_site
+        do_cas = is_cas_site  # never true in llsc programs
+    else:
+        do_ll = jnp.zeros_like(is_read_kw)
+        do_sc = is_sc_site   # never true in cas programs
+        do_cas = is_mod | is_cas_site
+
+    # LL: record reservation
+    ll_cell = jnp.where(do_ll, cell, r.ll_cell)
+    ll_ver = jnp.where(do_ll, cur_ver, r.ll_ver)
+
+    # SC: succeeds iff reservation matches this cell and version unchanged
+    sc_paired = r.ll_cell == cell
+    sc_ok = do_sc & sc_paired & (r.ll_ver == cur_ver)
+    pair_ok = ~(do_sc & ~sc_paired)  # proper-pairing assertion
+
+    # CAS: value (and owner for marked words) comparison
+    val_eq = cur_v == oldv
+    own_eq = jnp.where(E.is_marked(oldv), cur_o == oldo, True)
+    cas_ok = do_cas & val_eq & own_eq
+
+    success = sc_ok | cas_ok
+    write = success
+    table = table.at[cell].set(jnp.where(write, newv, cur_v))
+    owner = owner.at[cell].set(jnp.where(write, newo, cur_o))
+    ver = ver.at[cell].set(jnp.where(write, cur_ver + 1, cur_ver))
+
+    # SC consumes the reservation (success or failure)
+    ll_cell = jnp.where(do_sc, jnp.int32(-1), ll_cell)
+
+    did_mem = kind != MEM_NONE
+    return cur_v, cur_o, success, table, owner, ver, ll_cell, ll_ver, pair_ok, did_mem
+
+
+# ---------------------------------------------------------------------------
+# Per-site post-transitions.
+
+def make_post(mode: str, m: int):
+    """Build the list of post-transition functions, one per site.
+
+    Each takes (r: PRegs, rval, ro, success) -> PRegs (with complete/retval
+    possibly set)."""
+
+    def fs_read(r, rval, ro, success):
+        empty = rval == jnp.uint32(E.EMPTY)
+        haskey = E.dec_key(rval) == r.v
+        # empty: exit forward scan (Alg.1 l.12-13)
+        idx = jnp.where(r.i == r.hv, r.i, jnp.mod(r.i - 1 + m, m))
+        exit_fs = _enter_bs(r, idx)
+        # found key: dispatch helper
+        is_del = r.op == OP_DELETE
+        helper = _where_regs(is_del, _td_entry(r, rval, ro),
+                             _vc_entry(r, rval, ro))
+        # else advance (l.9-11); wrap -> break -> bs starts at i-1 == hv-1
+        i2 = jnp.mod(r.i + 1, m)
+        wrap = _enter_bs(r, jnp.mod(r.hv - 1 + m, m))
+        adv = _where_regs(i2 == r.hv, wrap, _mk(r, i=i2, pc=FS_READ))
+        return _select_regs([empty, haskey], [exit_fs, helper], adv)
+
+    def bs_read(r, rval, ro, success):
+        haskey = E.dec_key(rval) == r.v
+        is_del = r.op == OP_DELETE
+        helper = _where_regs(is_del, _td_entry(r, rval, ro),
+                             _vc_entry(r, rval, ro))
+        at_start = r.i == r.hv
+        adv = _where_regs(at_start, _after_bs(r),
+                          _mk(r, i=jnp.mod(r.i - 1 + m, m), pc=BS_READ))
+        return _where_regs(haskey, helper, adv)
+
+    def vc_mod(r, rval, ro, success):
+        # Alg.4 l.93: success -> validate_copy true
+        return _where_regs(success, _scan_found_true(r),
+                           _mk(r, pc=VC_READ))
+
+    def vc_read(r, rval, ro, success):
+        # Alg.4 l.94-96
+        haskey = E.dec_key(rval) == r.v
+        return _where_regs(haskey, _scan_found_true(r), _resume_scan(r, m))
+
+    def td_mod_tomb(r, rval, ro, success):
+        # Alg.4 l.86: try_delete returns Modify(...) result; delete returns it
+        return _complete(r, jnp.where(success, RET_TRUE, RET_FALSE))
+
+    def td_mod_del(r, rval, ro, success):
+        return _where_regs(success, _complete(r, RET_TRUE),
+                           _mk(r, pc=TD_READ))
+
+    def td_read(r, rval, ro, success):
+        haskey = E.dec_key(rval) == r.v
+        return _where_regs(haskey, _td_entry(r, rval, ro), _resume_scan(r, m))
+
+    def i_read_claim(r, rval, ro, success):
+        avail = E.is_available(rval)
+        claim = _mk(r, val=rval, val_o=ro, pc=I_MOD_CLAIM)
+        j2 = jnp.mod(r.j + 1, m)
+        abort = _complete(r, RET_ABORT)
+        nxt = _where_regs(j2 == r.hv, abort, _mk(r, j=j2, pc=I_READ_CLAIM))
+        return _where_regs(avail, claim, nxt)
+
+    def i_mod_claim(r, rval, ro, success):
+        scan = _mk(r, i=r.hv, pc=I_READ_SCAN)
+        j2 = jnp.mod(r.j + 1, m)
+        abort = _complete(r, RET_ABORT)
+        nxt = _where_regs(j2 == r.hv, abort, _mk(r, j=j2, pc=I_READ_CLAIM))
+        return _where_regs(success, scan, nxt)
+
+    def i_read_scan(r, rval, ro, success):
+        empty = rval == jnp.uint32(E.EMPTY)
+        own_cell = r.i == r.j
+        haskey = E.dec_key(rval) == r.v
+        relevant = ~own_cell & haskey
+        to_own = _mk(r, pc=I_READ_OWN)
+
+        closer = (H.probe_distance(r.i, r.hv, m)
+                  < H.probe_distance(r.j, r.hv, m))
+        is_final = rval == E.enc_final(r.v)
+        # l.51-53: other copy earlier or final -> del_copy(v, j)
+        give_up = _mk(r, pc=DC_READ)
+        is_reval = rval == E.enc_revalidate(r.v)
+        # l.55: val != revalidate -> del_other_copy
+        if mode == MODE_LLSC:
+            doc = _mk(r, val=rval, val_o=ro, pc=DOC_READ_OWN)
+        else:
+            marked_v = E.is_marked(rval) & (E.dec_key(rval) == r.v)
+            other_mark = marked_v & (ro != r.j)   # l.114: return true
+            own_mark = marked_v & (ro == r.j)
+            go_own = _mk(r, val=rval, val_o=ro, pc=DOC_READ_OWN_C)
+            go_cas = _mk(r, val=rval, val_o=ro, pc=DOC_CAS_MARK)
+            doc = _select_regs([other_mark, own_mark],
+                               [_advance_dedup(r, m), go_own], go_cas)
+        dup = _select_regs(
+            [closer | is_final, ~is_reval],
+            [give_up, doc],
+            _advance_dedup(r, m))
+        return _select_regs([empty, relevant], [to_own, dup],
+                            _advance_dedup(r, m))
+
+    def i_read_own(r, rval, ro, success):
+        # Alg.3 l.66
+        tent = rval == E.enc_tentative(r.v)
+        rst = E.restart(rval) & (E.dec_key(rval) == r.v)
+        fin = _mk(r, cur=rval, cur_o=ro, pc=I_MOD_FINAL)
+        restart_ = _mk(r, cur=rval, cur_o=ro, pc=I_MOD_RESTART)
+        dc = _mk(r, pc=DC_READ)
+        return _select_regs([tent, rst], [fin, restart_], dc)
+
+    def i_mod_final(r, rval, ro, success):
+        # l.67-68; on failure fall to l.69 with stale cur (tentative) ->
+        # restart(cur) false -> del_copy (l.71)
+        return _where_regs(success, _complete(r, RET_TRUE), _mk(r, pc=DC_READ))
+
+    def i_mod_restart(r, rval, ro, success):
+        rescan = _mk(r, i=r.hv, pc=I_READ_SCAN)
+        return _where_regs(success, rescan, _mk(r, pc=DC_READ))
+
+    def i_read_own2(r, rval, ro, success):
+        # Alg.3 l.57-58
+        rst = E.restart(rval) & (E.dec_key(rval) == r.v)
+        return _where_regs(rst, _mk(r, cur=rval, cur_o=ro, pc=I_MOD_RESTART),
+                           _mk(r, pc=DC_READ))
+
+    def dc_read(r, rval, ro, success):
+        rev = rval == E.enc_revalidate(r.v)
+        return _where_regs(rev, _mk(r, val=rval, val_o=ro, pc=DC_MOD_REVAL),
+                           _mk(r, val=rval, val_o=ro, pc=DC_MOD_TOMB))
+
+    def dc_mod_reval(r, rval, ro, success):
+        rescan = _mk(r, i=r.hv, pc=I_READ_SCAN)  # del_copy returned ⊥
+        return _where_regs(success, rescan, _mk(r, pc=DC_READ2))
+
+    def dc_read2(r, rval, ro, success):
+        return _mk(r, val=rval, val_o=ro, pc=DC_MOD_TOMB)
+
+    def dc_mod_tomb(r, rval, ro, success):
+        was_deleted = r.val == jnp.uint32(E.DELETED)
+        done = _complete(r, jnp.where(was_deleted, RET_TRUE, RET_FALSE))
+        return _where_regs(success, done, _mk(r, pc=DC_READ))
+
+    # ---- LL/SC del_other_copy ----
+    def doc_read_own(r, rval, ro, success):
+        tent = rval == E.enc_tentative(r.v)
+        return _where_regs(tent, _mk(r, cur=rval, cur_o=ro, pc=DOC_SC),
+                           _mk(r, pc=I_READ_OWN2))  # return false -> l.56-57
+
+    def doc_sc(r, rval, ro, success):
+        return _where_regs(success, _advance_dedup(r, m),
+                           _mk(r, pc=DOC_READ_I))
+
+    def doc_read_i(r, rval, ro, success):
+        fin = rval == E.enc_final(r.v)
+        return _where_regs(fin, _mk(r, pc=I_READ_OWN2), _advance_dedup(r, m))
+
+    # ---- CAS del_other_copy ----
+    def doc_cas_mark(r, rval, ro, success):
+        return _where_regs(success, _mk(r, pc=DOC_READ_OWN_C),
+                           _mk(r, pc=DOC_READ_I2))
+
+    def doc_read_i2(r, rval, ro, success):
+        fin = rval == E.enc_final(r.v)
+        return _where_regs(fin, _mk(r, pc=I_READ_OWN2), _advance_dedup(r, m))
+
+    def doc_read_own_c(r, rval, ro, success):
+        tent = rval == E.enc_tentative(r.v)
+        return _where_regs(tent, _mk(r, cur=rval, cur_o=ro, pc=DOC_CAS_COLL),
+                           _mk(r, pc=I_READ_OWN2))
+
+    def doc_cas_coll(r, rval, ro, success):
+        # l.122-123: CAS result ignored; return true
+        return _advance_dedup(r, m)
+
+    def halt(r, rval, ro, success):
+        return r
+
+    return [fs_read, bs_read, vc_mod, vc_read, td_mod_tomb, td_mod_del,
+            td_read, i_read_claim, i_mod_claim, i_read_scan, i_read_own,
+            i_mod_final, i_mod_restart, i_read_own2, dc_read, dc_mod_reval,
+            dc_read2, dc_mod_tomb, doc_read_own, doc_sc, doc_read_i,
+            doc_cas_mark, doc_read_i2, doc_read_own_c, doc_cas_coll, halt]
+
+
+# ---------------------------------------------------------------------------
+# Invariant monitors (Lemma 4 / Proposition 3), O(m^2) — for small-m tests.
+
+def check_invariants(table, m: int, hash_seed: int):
+    keys = E.dec_key(table)
+    is_key = keys != jnp.uint32(E.RESERVED_KEY)
+    is_final = is_key & (E.dec_tag(table) == E.TAG_FINAL)
+    # Lemma 4: at most one <v, final> per key
+    eq = keys[:, None] == keys[None, :]
+    both_final = is_final[:, None] & is_final[None, :]
+    off_diag = ~jnp.eye(m, dtype=bool)
+    lemma4 = ~jnp.any(eq & both_final & off_diag)
+    # Proposition 3: cells between h(v) and a cell containing v are non-empty
+    hv = H.hash_keys(keys, m, hash_seed)
+    idx = jnp.arange(m, dtype=jnp.int32)
+    dist_cell = H.probe_distance(idx, hv, m)           # dist of cell c from h(key_c)
+    # for cell c with key: no EMPTY cell e with dist(e, h(key_c)) < dist(c, h(key_c))
+    dist_e = H.probe_distance(idx[None, :], hv[:, None], m)  # [c, e]
+    empty = (table == jnp.uint32(E.EMPTY))[None, :]
+    hole = empty & (dist_e < dist_cell[:, None])
+    prop3 = ~jnp.any(is_key[:, None] & hole)
+    return lemma4 & prop3
+
+
+# ---------------------------------------------------------------------------
+# Top-level simulation.
+
+class Workload(NamedTuple):
+    op: np.ndarray   # int32[P,K]  (OP_* or OP_NONE)
+    key: np.ndarray  # uint32[P,K]
+
+
+def _setup_op(r: PRegs, wl_op_row, wl_key_row, m: int, hash_seed: int) -> PRegs:
+    """Prepare registers for the op at r.opidx (or HALT)."""
+    K = wl_op_row.shape[0]
+    in_range = r.opidx < K
+    op = jnp.where(in_range, wl_op_row[jnp.clip(r.opidx, 0, K - 1)], OP_NONE)
+    key = jnp.where(in_range, wl_key_row[jnp.clip(r.opidx, 0, K - 1)], 0)
+    hv = H.hash_keys(jnp.uint32(key), m, hash_seed)
+    active = op != OP_NONE
+    started = _mk(r, op=op, v=key, hv=hv, i=hv, cont=CONT_FS, pc=FS_READ,
+                  fresh=1, ll_cell=-1, ll_ver=0)
+    halted = _mk(r, pc=HALT, op=OP_NONE)
+    return _where_regs(active, started, halted)
+
+
+def make_step(mode: str, m: int, hash_seed: int, wl_op, wl_key,
+              check_inv: bool = False):
+    """Build step(state, p) applying one scheduled event of process p."""
+    posts = make_post(mode, m)
+    wl_op = jnp.asarray(wl_op, dtype=jnp.int32)
+    wl_key = jnp.asarray(wl_key, dtype=jnp.uint32)
+    K = wl_op.shape[1]
+
+    def step(state: SimState, p) -> SimState:
+        R = state.regs
+        r = PRegs(*(x[p] for x in R), complete=jnp.int32(0),
+                  retval=jnp.int32(RET_PENDING))
+
+        # record invocation time lazily
+        fresh_now = (r.fresh == 1) & (r.pc != HALT)
+        t_inv = state.t_inv.at[p, jnp.clip(r.opidx, 0, K - 1)].set(
+            jnp.where(fresh_now, state.t, state.t_inv[p, jnp.clip(r.opidx, 0, K - 1)]))
+        r = _mk(r, fresh=jnp.where(fresh_now, 0, r.fresh))
+
+        kind, cell, oldv, oldo, newv, newo = memop_spec(r, mode)
+        cell = jnp.clip(cell, 0, m - 1)
+        (rval, ro, success, table, owner, ver, ll_cell, ll_ver, pair_ok,
+         did_mem) = exec_memop(state.table, state.owner, state.ver, r, kind,
+                               cell, oldv, oldo, newv, newo, mode)
+        r = _mk(r, ll_cell=ll_cell, ll_ver=ll_ver)
+
+        # step accounting
+        opi = jnp.clip(r.opidx, 0, K - 1)
+        steps = state.steps.at[p, opi].add(jnp.where(did_mem, 1, 0))
+
+        r2 = jax.lax.switch(r.pc, posts, r, rval, ro, success)
+
+        # completion handling
+        comp = r2.complete == 1
+        results = state.results.at[p, opi].set(
+            jnp.where(comp, r2.retval, state.results[p, opi]))
+        t_rsp = state.t_rsp.at[p, opi].set(
+            jnp.where(comp, state.t, state.t_rsp[p, opi]))
+        nxt = _setup_op(_mk(r2, opidx=r2.opidx + 1), wl_op[p], wl_key[p], m,
+                        hash_seed)
+        r3 = _where_regs(comp, nxt, r2)
+
+        regs = Regs(*(x.at[p].set(getattr(r3, f))
+                      for f, x in zip(Regs._fields, R)))
+        new_pair = state.pair_ok & pair_ok
+        inv_ok = state.inv_ok
+        if check_inv:
+            inv_ok = inv_ok & check_invariants(table, m, hash_seed)
+        return SimState(table, owner, ver, regs, results, t_inv, t_rsp, steps,
+                        state.t + 1, new_pair, inv_ok)
+
+    return step
+
+
+def init_state(mode: str, m: int, hash_seed: int, wl_op, wl_key) -> SimState:
+    wl_op = jnp.asarray(wl_op, dtype=jnp.int32)
+    wl_key = jnp.asarray(wl_key, dtype=jnp.uint32)
+    P, K = wl_op.shape
+    table = jnp.full((m,), E.EMPTY, dtype=jnp.uint32)
+    owner = jnp.full((m,), E.NO_OWNER, dtype=jnp.int32)
+    ver = jnp.zeros((m,), dtype=jnp.int32)
+    zero = jnp.zeros((P,), dtype=jnp.int32)
+    r = PRegs(pc=zero, opidx=zero, v=zero.astype(jnp.uint32), hv=zero, i=zero,
+              j=zero, val=zero.astype(jnp.uint32), val_o=zero,
+              cur=zero.astype(jnp.uint32), cur_o=zero, cont=zero,
+              ll_cell=zero - 1, ll_ver=zero, fresh=zero, op=zero,
+              complete=zero, retval=zero)
+    # set up op 0 for every process
+    rs = []
+    for f in range(P):
+        rp = PRegs(*(x[f] for x in r))
+        rp = _setup_op(rp, wl_op[f], wl_key[f], m, hash_seed)
+        rs.append(rp)
+    regs = Regs(*(jnp.stack([getattr(rp, f) for rp in rs])
+                  for f in Regs._fields[:15]))
+    results = jnp.full((P, K), RET_PENDING, dtype=jnp.int32)
+    t_inv = jnp.full((P, K), -1, dtype=jnp.int32)
+    t_rsp = jnp.full((P, K), -1, dtype=jnp.int32)
+    steps = jnp.zeros((P, K), dtype=jnp.int32)
+    return SimState(table, owner, ver, regs, results, t_inv, t_rsp, steps,
+                    jnp.int32(0), jnp.bool_(True), jnp.bool_(True))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "m", "hash_seed",
+                                             "check_inv"))
+def _run_schedule(state: SimState, schedule, wl_op, wl_key, *, mode: str,
+                  m: int, hash_seed: int, check_inv: bool) -> SimState:
+    step = make_step(mode, m, hash_seed, wl_op, wl_key, check_inv)
+
+    def body(st, p):
+        return step(st, p), None
+
+    state, _ = jax.lax.scan(body, state, schedule)
+    return state
+
+
+def simulate(wl: Workload, m: int, schedule, mode: str = MODE_LLSC,
+             hash_seed: int = 0, check_inv: bool = False) -> SimState:
+    """Run a full simulation: ``schedule`` is an int32[T] array of process ids
+    (one shared-memory event each)."""
+    wl_op = jnp.asarray(wl.op, dtype=jnp.int32)
+    wl_key = jnp.asarray(wl.key, dtype=jnp.uint32)
+    state = init_state(mode, m, hash_seed, wl_op, wl_key)
+    schedule = jnp.asarray(schedule, dtype=jnp.int32)
+    return _run_schedule(state, schedule, wl_op, wl_key, mode=mode, m=m,
+                         hash_seed=hash_seed, check_inv=check_inv)
+
+
+def history_arrays(state: SimState, wl: Workload):
+    """Extract (proc, opidx, op, key, ret, t_inv, t_rsp) numpy arrays of all
+    invoked operations, for the linearizability checker."""
+    op = np.asarray(wl.op)
+    key = np.asarray(wl.key)
+    res = np.asarray(state.results)
+    t_inv = np.asarray(state.t_inv)
+    t_rsp = np.asarray(state.t_rsp)
+    P, K = op.shape
+    rows = []
+    for p in range(P):
+        for k in range(K):
+            if op[p, k] == OP_NONE or t_inv[p, k] < 0:
+                continue
+            rows.append((p, k, int(op[p, k]), int(key[p, k]), int(res[p, k]),
+                         int(t_inv[p, k]), int(t_rsp[p, k])))
+    return rows

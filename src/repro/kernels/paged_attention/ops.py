@@ -1,0 +1,23 @@
+"""Jitted wrapper for paged attention with a jnp fallback path.
+
+``paged_attention(..., use_kernel=False)`` routes to the oracle — used on
+meshes/dtypes where the kernel is not applicable and in the sharded
+flash-decoding combine (dist/sp.py)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.paged_attention import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def paged_attention(q, k_pages, v_pages, page_ids, lens, *,
+                    use_kernel: bool = True, interpret: bool = False):
+    if use_kernel:
+        return paged_attention_kernel(q, k_pages, v_pages, page_ids, lens,
+                                      interpret=interpret)
+    return paged_attention_ref(q, k_pages, v_pages, page_ids, lens)

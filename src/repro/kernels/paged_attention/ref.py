@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the paged-attention decode kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_ids, lens):
+    """Decode attention over paged KV.
+
+    q:        [B, QH, D]      single query token per sequence
+    k_pages:  [NP, PS, KH, D] physical key pool
+    v_pages:  [NP, PS, KH, D] physical value pool
+    page_ids: int32[B, MP]    physical page per (seq, logical page); -1 unused
+    lens:     int32[B]        KV length per sequence
+    returns:  [B, QH, D]
+    """
+    B, QH, D = q.shape
+    NP, PS, KH, _ = k_pages.shape
+    MP = page_ids.shape[1]
+    G = QH // KH
+
+    safe_ids = jnp.clip(page_ids, 0, NP - 1)
+    k = k_pages[safe_ids].reshape(B, MP * PS, KH, D)
+    v = v_pages[safe_ids].reshape(B, MP * PS, KH, D)
+    pos = jnp.arange(MP * PS)[None, :]
+    valid = (pos < lens[:, None]) & jnp.repeat(page_ids >= 0, PS, axis=1)
+
+    qg = q.reshape(B, KH, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,blhd->bhgl", qg, kf) / jnp.sqrt(D)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgl,blhd->bhgd", w, vf)
+    return out.reshape(B, QH, D).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.probe.ops import probe_lookup, resolved_fraction
+from repro.kernels.probe.ref import probe_lookup_ref

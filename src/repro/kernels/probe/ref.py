@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the probe-lookup kernel.
+
+The reference is the batched engine's ``find_batch`` (wait-free vectorized
+probing).  The kernel must agree exactly on (found, slot) for every key."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import batched as BT
+from repro.core import encoding as E
+
+
+def probe_lookup_ref(table: jnp.ndarray, keys: jnp.ndarray, seed: int):
+    """table: uint32[m] quiescent cells; keys: uint32[B].
+    Returns (found bool[B], slot int32[B])."""
+    ht = BT.HashTable(table=table, num_keys=jnp.int32(0),
+                      num_tombs=jnp.int32(0), seed=jnp.int32(seed))
+    return BT.find_batch(ht, keys)

@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell against ShapeDtypeStruct stand-ins (no allocation), print
+memory_analysis()/cost_analysis(), parse the partitioned HLO for collective
+bytes, and write one JSON artifact per cell for EXPERIMENTS.md §Dry-run /
+§Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+      --shape train_4k --mesh single [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, cell_applicable, input_specs
+from repro.dist import sharding as SH
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import get_model
+from repro.serving import engine as EG
+from repro.training import train_step as TS
+
+BATCH_LOGICAL = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "positions": (None,),             # decode: replicated (see engine)
+    "src_embeds": ("batch", "seq", None),
+    "patch_embeds": ("batch", None, None),
+    "mrope_positions": (None, "batch", "seq"),
+}
+
+
+def _abstract(fn, *args):
+    """eval_shape that also captures non-array aux output via a box."""
+    box = {}
+
+    def wrapped(*a):
+        out, aux = fn(*a)
+        box["aux"] = aux
+        return out
+
+    sds = jax.eval_shape(wrapped, *args)
+    return sds, box["aux"]
+
+
+def _shardings(rules, axes_tree, sds_tree):
+    return rules.tree_shardings(axes_tree, sds_tree)
+
+
+def _batch_shardings(rules, specs, *, decode: bool):
+    out = {}
+    for k, sds in specs.items():
+        logical = BATCH_LOGICAL[k]
+        if decode:
+            spec = P()
+        else:
+            spec = rules.spec(logical, sds.shape)
+        out[k] = NamedSharding(rules.mesh, spec)
+    return out
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
+               cfg_overrides: dict | None = None):
+    """Returns (lowered, compiled, meta) for one cell."""
+    overrides = dict(cfg_overrides or {})
+    rules_preset = overrides.pop("rules", "default")
+    # rolled layer scan (fast compiles); the roofline parser is loop-aware
+    cfg = dataclasses.replace(get_config(arch_id), **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    specs = input_specs(cfg, shape)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        rules = SH.dp_rules(mesh) if rules_preset == "dp" \
+            else SH.train_rules(mesh)
+        state_sds, state_axes = _abstract(
+            lambda k: TS.init_state(cfg, k), key)
+        state_sh = _shardings(rules, state_axes, state_sds)
+        batch_sh = _batch_shardings(rules, specs, decode=False)
+        step = TS.make_train_step(cfg, rules=rules)
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state_sds, specs)
+
+    elif shape.kind == "prefill":
+        rules = SH.dp_rules(mesh) if rules_preset == "dp" \
+            else SH.train_rules(mesh)   # prefill is compute-bound like train
+        params_sds, axes = _abstract(lambda k: model.init(cfg, k), key)
+        params_sh = _shardings(rules, axes, params_sds)
+        batch_sh = _batch_shardings(rules, specs, decode=False)
+
+        def prefill_step(params, batch):
+            from repro.dist import ctx
+            with ctx.use_rules(rules):
+                kw = {}
+                if "src_embeds" in batch:
+                    kw["src_embeds"] = batch["src_embeds"]
+                if "patch_embeds" in batch:
+                    kw["patch_embeds"] = batch["patch_embeds"]
+                    kw["mrope_positions"] = batch["mrope_positions"]
+                logits, _ = model.forward(cfg, params, batch["tokens"],
+                                          remat=False, last_only=True, **kw)
+            return logits
+
+        jitted = jax.jit(prefill_step, in_shardings=(params_sh, batch_sh))
+        lowered = jitted.lower(params_sds, specs)
+
+    else:  # decode
+        rules = SH.serve_rules(mesh)
+        params_sds, axes = _abstract(lambda k: model.init(cfg, k), key)
+        params_sh = _shardings(rules, axes, params_sds)
+        B = shape.global_batch
+        state_sds, state_axes = EG.make_decode_state(
+            cfg, B, S_max=shape.seq_len, rules=rules, abstract=True)
+        state_sh = _shardings(rules, state_axes, state_sds)
+        serve = EG.make_serve_step(cfg, S_max=shape.seq_len, rules=rules)
+        tok_sh = NamedSharding(mesh, P())
+
+        if cfg.family == "vlm":
+            def serve_step(params, state, tokens, positions, mrope):
+                return serve(params, state, tokens, positions, mrope)
+            in_sh = (params_sh, state_sh, tok_sh, tok_sh, tok_sh)
+            args = (params_sds, state_sds, specs["tokens"],
+                    specs["positions"], specs["mrope_positions"])
+        else:
+            def serve_step(params, state, tokens, positions):
+                return serve(params, state, tokens, positions)
+            in_sh = (params_sh, state_sh, tok_sh, tok_sh)
+            args = (params_sds, state_sds, specs["tokens"],
+                    specs["positions"])
+        jitted = jax.jit(serve_step, in_shardings=in_sh,
+                         donate_argnums=(1,))
+        lowered = jitted.lower(*args)
+
+    compiled = lowered.compile()
+    meta = {"arch": arch_id, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+            "kind": shape.kind}
+    return cfg, shape, lowered, compiled, meta
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str,
+             verbose: bool = True, cfg_overrides: dict | None = None,
+             tag_suffix: str = "") -> dict:
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch_id}__{shape_name}__{mesh_name}{tag_suffix}"
+    ok, why = cell_applicable(cfg, shape)
+    rec: dict = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                 "overrides": cfg_overrides or {}}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _save(out_dir, tag, rec)
+        return rec
+
+    t0 = time.time()
+    try:
+        cfg, shape, lowered, compiled, meta = lower_cell(
+            arch_id, shape_name, multi_pod, cfg_overrides=cfg_overrides)
+        t_compile = time.time() - t0
+        mf = RL.model_flops(cfg, shape)
+        from repro.launch.flops_model import (executed_bytes_per_chip,
+                                              executed_flops)
+        ex = executed_flops(cfg, shape)
+        eb = executed_bytes_per_chip(cfg, shape, meta["chips"], 16)
+        rl = RL.extract(compiled, arch=arch_id, shape_name=shape_name,
+                        mesh_name=mesh_name, chips=meta["chips"],
+                        model_flops_total=mf,
+                        executed_flops_total=ex.total,
+                        executed_bytes_per_chip=eb)
+        rec["flops_breakdown"] = dataclasses.asdict(ex)
+        mem = compiled.memory_analysis()
+        mem_rec = {k: int(getattr(mem, k)) for k in
+                   ("argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    "alias_size_in_bytes") if hasattr(mem, k)}
+        rec.update(status="ok", compile_s=round(t_compile, 1),
+                   kind=meta["kind"], memory_analysis=mem_rec,
+                   roofline=rl.to_dict())
+        if verbose:
+            print(f"[{tag}] compiled in {t_compile:.0f}s  "
+                  f"flops/chip={rl.hlo_flops_per_chip:.3e}  "
+                  f"bytes/chip={rl.hlo_bytes_per_chip:.3e}  "
+                  f"coll_wire={rl.collective_wire_bytes:.3e}  "
+                  f"dom={rl.dominant}  frac={rl.roofline_fraction:.3f}")
+            print(f"  memory_analysis: {mem_rec}")
+    except Exception as e:  # noqa: BLE001 — record, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[{tag}] FAILED: {type(e).__name__}: {e}")
+    _save(out_dir, tag, rec)
+    return rec
+
+
+def _save(out_dir: str, tag: str, rec: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (e.g. tp_impl=manual)")
+    ap.add_argument("--tag", default="", help="artifact name suffix")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    archs = sorted(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(run_cell(arch, shape, mp, args.out,
+                                        cfg_overrides=overrides,
+                                        tag_suffix=args.tag))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"of {len(results)} cells")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,292 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Sources (EXPERIMENTS.md §Roofline):
+* ``compiled.cost_analysis()`` — per-device HLO FLOPs and bytes accessed
+  (the compiled module is the post-SPMD per-device program).
+* ``compiled.as_text()`` — the partitioned HLO; collective bytes are NOT in
+  cost_analysis, so we parse every all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute and sum operand sizes.
+* ``compiled.memory_analysis()`` — proves the per-device footprint fits.
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_shapes(line: str):
+    """Result shape(s) of an HLO instruction line (handles tuples)."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return []
+    rhs = lhs[1]
+    op_end = rhs.find("(")
+    shape_str = rhs[:op_end] if op_end > 0 else rhs
+    return _SHAPE_RE.findall(shape_str)
+
+
+def _group_size(line: str) -> Optional[int]:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return None
+
+
+def _line_collective(s: str):
+    """(kind, operand_bytes, wire_bytes, promoted) of one HLO line, or None.
+
+    ``promoted``: XLA:CPU promotes bf16 collectives to f32 (its collective
+    kernels lack bf16), wrapping the operand in a convert — detectable as an
+    f32 collective whose operand fusion carries a ``convert`` marker.  On
+    the TPU target these run in bf16, so the corrected wire bytes halve.
+    """
+    for kind in COLLECTIVE_OPS:
+        # match ` all-reduce(` or ` all-reduce-start(`
+        if f" {kind}(" in s or f" {kind}-start(" in s:
+            shapes = _result_shapes(s)
+            if not shapes:
+                return None
+            bytes_res = sum(_shape_bytes(dt, dm) for dt, dm in shapes)
+            promoted = (all(dt == "f32" for dt, _ in shapes)
+                        and "convert" in s.split("(", 1)[1][:120])
+            g = _group_size(s) or 1
+            if kind == "all-gather":
+                operand = bytes_res / max(g, 1)
+                wire = bytes_res * (g - 1) / max(g, 1)
+            elif kind == "reduce-scatter":
+                operand = bytes_res * g
+                wire = bytes_res * (g - 1) / max(g, 1)
+            elif kind == "all-reduce":
+                operand = bytes_res
+                wire = 2 * bytes_res * (g - 1) / max(g, 1)
+            elif kind == "all-to-all":
+                operand = bytes_res
+                wire = bytes_res * (g - 1) / max(g, 1)
+            else:  # collective-permute
+                operand = bytes_res
+                wire = bytes_res
+            return kind, operand, wire, promoted
+    return None
+
+
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEAD_RE.match(line.strip()) if "{" in line else None
+        if m and " = " not in line.split("{")[0]:
+            cur = m.group(2)
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: list) -> int:
+    """Trip count of a lax.scan-style while: the condition compares the
+    induction variable to a constant bound.  Dynamic bounds (flash kv loop)
+    have no constant -> assume 1 (those loops carry no collectives)."""
+    consts = []
+    for line in cond_lines:
+        if "compare(" in line or "constant(" in line:
+            consts += [int(x) for x in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Loop-aware collective accounting from partitioned HLO.
+
+    XLA keeps lax.scan as a `while`, so a naive line scan counts per-layer
+    collectives once.  We split the module into computations, read each
+    while's trip count from its condition's constant bound, and multiply the
+    body's collectives by the product of enclosing trip counts (nested scans
+    compose, e.g. SSD chunks inside the layer scan).
+
+    operand_bytes: per-device operand sizes (the assignment's metric).
+    wire_bytes: ring-algorithm bytes crossing links per device —
+      all-reduce 2·(g-1)/g·size, all-gather/reduce-scatter (g-1)/g·full,
+      all-to-all (g-1)/g·size, collective-permute 1·size.
+    """
+    comps = _split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEAD_RE.match(line.strip())
+            if m:
+                entry = m.group(2)
+    out = {k: {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0,
+               "wire_bytes_tpu": 0.0}
+           for k in COLLECTIVE_OPS}
+    if entry is None:    # fallback: flat scan
+        comps = {"__all__": hlo_text.splitlines()}
+        entry = "__all__"
+
+    def visit(comp: str, mult: float, seen: tuple):
+        if comp not in comps or comp in seen:
+            return
+        for line in comps[comp]:
+            s = line.strip()
+            hit = _line_collective(s)
+            if hit is not None:
+                kind, operand, wire, promoted = hit
+                out[kind]["count"] += mult
+                out[kind]["operand_bytes"] += operand * mult
+                out[kind]["wire_bytes"] += wire * mult
+                out[kind]["wire_bytes_tpu"] += \
+                    wire * mult * (0.5 if promoted else 1.0)
+                continue
+            m = _WHILE_RE.search(s)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                trip = _trip_count(comps.get(cond, []))
+                visit(body, mult * trip, seen + (comp,))
+            elif " call(" in s or "conditional(" in s:
+                for name in re.findall(r"to_apply=%?([\w.\-]+)", s):
+                    visit(name, mult, seen + (comp,))
+
+    visit(entry, 1.0, ())
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float      # raw cost_analysis (loops undercounted)
+    executed_flops_total: float    # analytic executed FLOPs (flops_model)
+    hlo_bytes_per_chip: float      # raw cost_analysis (diagnostic)
+    executed_bytes_per_chip: float # analytic HBM traffic (flops_model)
+    collective_operand_bytes: float
+    collective_wire_bytes: float       # as parsed (CPU-promoted f32)
+    collective_wire_bytes_tpu: float   # bf16-native on the TPU target
+    collective_breakdown: Dict[str, Dict[str, float]]
+    model_flops_total: float
+    peak_memory_per_chip: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.executed_flops_total / self.chips / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.executed_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_wire_bytes_tpu / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return (self.model_flops_total / self.executed_flops_total
+                if self.executed_flops_total else 0.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs time / achievable step time (bound = max of terms)."""
+        bound = max(self.compute_s, self.memory_s, self.collective_s)
+        ideal = self.model_flops_total / (self.chips * PEAK_FLOPS)
+        return ideal / bound if bound else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D train (fwd+bwd), 2·N·D prefill, 2·N_active·B/step
+    decode.  N excludes embedding-table rows that a step doesn't touch?  No —
+    standard convention: N = all non-embedding params + embeddings counted
+    once via the logits matmul; we use the analytic param_count (MoE:
+    active)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq
+
+
+def extract(compiled, *, arch: str, shape_name: str, mesh_name: str,
+            chips: int, model_flops_total: float,
+            executed_flops_total: float,
+            executed_bytes_per_chip: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    mem = compiled.memory_analysis()
+    peak = float(getattr(mem, "temp_size_in_bytes", 0) +
+                 getattr(mem, "argument_size_in_bytes", 0) +
+                 getattr(mem, "output_size_in_bytes", 0) -
+                 getattr(mem, "alias_size_in_bytes", 0))
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops_per_chip=flops,
+        executed_flops_total=executed_flops_total,
+        hlo_bytes_per_chip=byts,
+        executed_bytes_per_chip=executed_bytes_per_chip,
+        collective_operand_bytes=sum(v["operand_bytes"]
+                                     for v in coll.values()),
+        collective_wire_bytes=sum(v["wire_bytes"] for v in coll.values()),
+        collective_wire_bytes_tpu=sum(v["wire_bytes_tpu"]
+                                      for v in coll.values()),
+        collective_breakdown=coll,
+        model_flops_total=model_flops_total,
+        peak_memory_per_chip=peak,
+    )

@@ -1,0 +1,126 @@
+"""Serving driver: continuous batching over the paged engine.
+
+Demonstrates the paper's table as the page allocator under realistic churn:
+sequences arrive, decode for a while, finish, get EVICTED (delete -> pages
+become tombstones), and new sequences immediately RECLAIM those page slots
+(tombstone reuse — Proposition 2 as a memory allocator).  The pool never
+needs compaction; occupancy stays bounded by live pages.
+
+Usage (CPU smoke):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b --smoke \
+      --rounds 6 --batch 4 --max-len 48
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.registry import get_model
+from repro.serving import engine as EG
+from repro.serving import page_table as PT
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching: B decode slots; finished sequences
+    are evicted (pages freed) and their slot re-admitted with a fresh
+    sequence id."""
+
+    def __init__(self, cfg, params, *, batch: int, max_len: int,
+                 page_size: int, rules=None, seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.B, self.max_len, self.page_size = batch, max_len, page_size
+        self.state, _ = EG.make_decode_state(cfg, batch, S_max=max_len,
+                                             rules=rules,
+                                             page_size=page_size)
+        self.step_fn = jax.jit(EG.make_serve_step(cfg, S_max=max_len,
+                                                  rules=rules,
+                                                  page_size=page_size))
+        self.pos = np.zeros(batch, np.int32)
+        self.lengths = np.random.default_rng(seed).integers(
+            max_len // 3, max_len - 1, size=batch)
+        self.next_seq_id = batch
+        self.rng = np.random.default_rng(seed + 1)
+        self.evictions = 0
+        self.tokens = jnp.zeros((batch, 1), jnp.int32)
+
+    def decode_round(self, steps: int):
+        maxP = -(-self.max_len // self.page_size)
+        for _ in range(steps):
+            positions = jnp.asarray(self.pos)
+            if self.cfg.family == "vlm":
+                mr = jnp.broadcast_to(positions[None, :, None],
+                                      (3, self.B, 1)).astype(jnp.int32)
+                logits, self.state = self.step_fn(
+                    self.params, self.state, self.tokens, positions, mr)
+            else:
+                logits, self.state = self.step_fn(
+                    self.params, self.state, self.tokens, positions)
+            self.tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            self.pos += 1
+            # evict finished sequences; re-admit fresh ones in their slot
+            done = np.nonzero(self.pos >= self.lengths)[0]
+            if len(done) and "table" in self.state:
+                mask = np.zeros(self.B, bool)
+                mask[done] = True
+                self.state["table"] = PT.free_sequences(
+                    self.state["table"], self.state["seq_ids"],
+                    jnp.asarray(self.pos), page_size=self.page_size,
+                    max_pages=maxP, active=jnp.asarray(mask))
+                seq_ids = np.asarray(self.state["seq_ids"]).copy()
+                for slot in done:
+                    seq_ids[slot] = self.next_seq_id
+                    self.next_seq_id += 1
+                    self.pos[slot] = 0
+                    self.lengths[slot] = self.rng.integers(
+                        self.max_len // 3, self.max_len - 1)
+                    self.evictions += 1
+                self.state["seq_ids"] = jnp.asarray(seq_ids)
+            elif len(done):
+                for slot in done:
+                    self.pos[slot] = 0
+                    self.evictions += 1
+
+    def table_stats(self):
+        if "table" not in self.state:
+            return None
+        return PT.stats(self.state["table"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-32b", choices=sorted(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--steps-per-round", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--page-size", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    params, _ = model.init(cfg, jax.random.PRNGKey(0))
+    srv = ContinuousBatcher(cfg, params, batch=args.batch,
+                            max_len=args.max_len, page_size=args.page_size)
+    for r in range(args.rounds):
+        srv.decode_round(args.steps_per_round)
+        st = srv.table_stats()
+        if st is not None:
+            print(f"[serve] round {r}: evictions={srv.evictions} "
+                  f"live_pages={int(st.live_pages)} "
+                  f"tombstones={int(st.tombstones)} "
+                  f"occupancy={float(st.occupancy):.3f}")
+        else:
+            print(f"[serve] round {r}: evictions={srv.evictions} "
+                  f"(attention-free arch: no page table)")
+    print("[serve] done — page slots were reused in place "
+          "(no rebuild, no compaction)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

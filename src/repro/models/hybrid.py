@@ -1,0 +1,87 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared (attention+MLP) block
+whose parameters are reused every ``shared_attn_every`` layers.
+
+38 = 6·6 + 2 for the full config: six groups of (6 mamba layers -> shared
+attn block), then 2 trailing mamba layers.  Each *invocation* of the shared
+block has its own KV cache at decode time (parameters shared, state not).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.ctx import shard_act
+from repro.models import layers as L
+from repro.models import nn
+from repro.models import ssm
+
+
+def num_shared_invocations(cfg) -> int:
+    return cfg.num_layers // cfg.shared_attn_every
+
+
+def _mamba_layer_init(key, cfg, dtype):
+    p, a = ssm.mamba_init(key, cfg, dtype)
+    pn, an = nn.norm_init(cfg.d_model, dtype)
+    return {"mamba": p, "ln": pn}, {"mamba": a, "ln": an}
+
+
+def init(cfg, key) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    dtype = cfg.activation_dtype()
+    k_emb, k_m, k_s = jax.random.split(key, 3)
+    pe, ae = nn.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype)
+    stacked, axes = nn.stack_layer_params(
+        k_m, cfg.num_layers, lambda k: _mamba_layer_init(k, cfg, dtype))
+    psh, ash = L.block_init(k_s, cfg, dtype)    # the ONE shared block
+    pn, an = nn.norm_init(cfg.d_model, dtype)
+    return ({"embed": pe, "layers": stacked, "shared": psh,
+             "final_norm": pn},
+            {"embed": ae, "layers": axes, "shared": ash, "final_norm": an})
+
+
+def _mamba_scan(cfg, stacked, x, remat: bool):
+    def body(x, layer_p):
+        h = ssm.mamba_forward(layer_p["mamba"],
+                              nn.rmsnorm(layer_p["ln"], x), cfg)
+        return shard_act(x + h, ("batch", "seq", None)), None
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    unroll = jax.tree.leaves(stacked)[0].shape[0] if cfg.unroll_layers else 1
+    x, _ = jax.lax.scan(fn, x, stacked, unroll=unroll)
+    return x
+
+
+def forward(cfg, params, tokens, *, remat: bool = False,
+            last_only: bool = False, **_):
+    B, S = tokens.shape
+    every = cfg.shared_attn_every
+    n_inv = num_shared_invocations(cfg)
+    x = nn.embed_lookup(params["embed"], tokens)
+    x = shard_act(x, ("batch", "seq", None))
+    positions = jnp.arange(S)[None, :]
+
+    for g in range(n_inv):
+        chunk = jax.tree.map(lambda t: t[g * every:(g + 1) * every],
+                             params["layers"])
+        x = _mamba_scan(cfg, chunk, x, remat)
+        x = L.block_apply(params["shared"], x, positions, cfg)
+        x = shard_act(x, ("batch", "seq", None))
+    rem = cfg.num_layers - n_inv * every
+    if rem:
+        chunk = jax.tree.map(lambda t: t[n_inv * every:], params["layers"])
+        x = _mamba_scan(cfg, chunk, x, remat)
+
+    if last_only:
+        x = x[:, -1:]
+    x = nn.rmsnorm(params["final_norm"], x)
+    logits = nn.embed_logits(params["embed"], x).astype(jnp.float32)
+    return shard_act(logits, ("batch", "seq", "vocab")), jnp.float32(0.0)
+
+
+def loss_fn(cfg, params, tokens, labels, *, remat: bool = True):
+    logits, _ = forward(cfg, params, tokens, remat=remat)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

@@ -1,0 +1,145 @@
+"""Decoder-only LM covering the dense / moe / vlm families (incl. gemma3's
+5:1 local:global attention pattern), with scan-over-layers and logical
+activation sharding constraints.
+
+Layer stacking: uniform families scan over all L layers (one lowered layer
+body).  gemma3 scans over L/6 *superblocks* of (5 local + 1 global) layers so
+the sliding-window bound stays static inside ``flash_attention`` — local
+layers cost O(S·window), global layers O(S²/2); the dry-run cost analysis
+sees the true sub-quadratic FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import tp as TP
+from repro.dist.ctx import shard_act
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import nn
+
+
+def _layer_init(key, cfg, dtype):
+    if cfg.family == "moe":
+        k1, k2 = jax.random.split(key)
+        pa, aa = L.attn_init(k1, cfg, dtype)
+        pm, am = MOE.moe_init(k2, cfg, dtype)
+        pn1, an1 = nn.norm_init(cfg.d_model, dtype)
+        pn2, an2 = nn.norm_init(cfg.d_model, dtype)
+        return ({"attn": pa, "moe": pm, "ln1": pn1, "ln2": pn2},
+                {"attn": aa, "moe": am, "ln1": an1, "ln2": an2})
+    return L.block_init(key, cfg, dtype)
+
+
+def init(cfg, key) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    dtype = cfg.activation_dtype()
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    pe, ae = nn.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype)
+    stacked, axes = nn.stack_layer_params(
+        k_layers, cfg.num_layers,
+        lambda k: _layer_init(k, cfg, dtype))
+    pn, an = nn.norm_init(cfg.d_model, dtype)
+    p = {"embed": pe, "layers": stacked, "final_norm": pn}
+    a = {"embed": ae, "layers": axes, "final_norm": an}
+    if not cfg.tie_embeddings:
+        ph, ah = nn.dense_init(k_head, cfg.d_model, cfg.vocab_size,
+                               bias=False, dtype=dtype,
+                               axes=("embed", "vocab"))
+        p["lm_head"] = ph
+        a["lm_head"] = ah
+    return p, a
+
+
+def _apply_layer(cfg, p, x, positions, *, window: int,
+                 mrope_positions=None):
+    x = shard_act(x, ("batch", "seq", None))
+    if cfg.family == "moe":
+        x = TP.attn_apply_tp(cfg, p, x, positions, window=window,
+                             mrope_positions=mrope_positions)
+        y, aux = MOE.moe_apply(p["moe"], nn.rmsnorm(p["ln2"], x), cfg)
+        return x + y, aux
+    x = TP.block_apply_tp(cfg, p, x, positions, window=window,
+                          mrope_positions=mrope_positions)
+    return x, jnp.float32(0.0)
+
+
+def _scan_layers(cfg, stacked, x, positions, mrope_positions,
+                 remat: bool = False):
+    """Scan over the layer stack; returns (x, total_aux)."""
+    pat = cfg.pattern_local
+
+    def body(carry, layer_p):
+        x, aux = carry
+        if pat:
+            # superblock: pat local layers then 1 global
+            for i in range(pat + 1):
+                sub = jax.tree.map(lambda t: t[i], layer_p)
+                win = cfg.local_window if i < pat else 0
+                x, a = _apply_layer(cfg, sub, x, positions, window=win,
+                                    mrope_positions=mrope_positions)
+                aux = aux + a
+        else:
+            x, a = _apply_layer(cfg, layer_p, x, positions, window=0,
+                                mrope_positions=mrope_positions)
+            aux = aux + a
+        return (x, aux), None
+
+    if pat:
+        group = pat + 1
+        assert cfg.num_layers % group == 0, (cfg.num_layers, group)
+        ng = cfg.num_layers // group
+        stacked = jax.tree.map(
+            lambda t: t.reshape((ng, group) + t.shape[1:]), stacked)
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    n_steps = cfg.num_layers // (pat + 1) if pat else cfg.num_layers
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)), stacked,
+                               unroll=n_steps if cfg.unroll_layers else 1)
+    return x, aux
+
+
+def forward(cfg, params, tokens, *, positions=None, patch_embeds=None,
+            mrope_positions=None, remat: bool = False,
+            last_only: bool = False):
+    """Full-sequence forward -> logits [B,S,V] (f32) and aux loss."""
+    B, S = tokens.shape
+    x = nn.embed_lookup(params["embed"], tokens)
+    if patch_embeds is not None:
+        # vision stub: patch embeddings occupy the first n_patch positions
+        n_patch = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype),
+                             x[:, n_patch:]], axis=1)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    x = shard_act(x, ("batch", "seq", None))
+    x, aux = _scan_layers(cfg, params["layers"], x, positions,
+                          mrope_positions, remat=remat)
+    if last_only:
+        x = x[:, -1:]
+    x = nn.rmsnorm(params["final_norm"], x)
+    logits = _logits(cfg, params, x)
+    return logits, aux
+
+
+def _logits(cfg, params, x):
+    if cfg.tie_embeddings:
+        logits = nn.embed_logits(params["embed"], x)
+    else:
+        logits = nn.dense(params["lm_head"], x)
+    return shard_act(logits.astype(jnp.float32), ("batch", "seq", "vocab"))
+
+
+def loss_fn(cfg, params, tokens, labels, *, remat: bool = True):
+    """Mean next-token cross entropy (labels = tokens shifted by caller)."""
+    logits, aux = forward(cfg, params, tokens, remat=remat)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = -jnp.mean(ll)
+    if cfg.family == "moe":
+        loss = loss + 0.01 * aux / cfg.num_layers
+    return loss

@@ -1,0 +1,97 @@
+"""Minimal functional NN substrate: params are pytrees of jnp arrays; every
+parameter carries *logical axis names* in a parallel pytree of
+``jax.sharding.PartitionSpec``-ready tuples, which ``dist/sharding.py`` maps
+to mesh axes (divisibility-aware).  No flax/haiku dependency — the framework
+owns its module system (explicit init/apply pairs, scan-friendly stacked
+layer parameters).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]  # same tree, leaves = tuple of logical axis names
+
+
+@dataclasses.dataclass
+class ParamAndAxes:
+    params: Params
+    axes: Axes
+
+
+def _truncnorm(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool, dtype,
+               axes: Tuple[str, str], scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / math.sqrt(d_in))
+    p = {"w": _truncnorm(key, (d_in, d_out), scale, dtype)}
+    a = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        a["b"] = (axes[1],)
+    return p, a
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(d: int, dtype, axis_name: str = "embed"):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": (axis_name,)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    # 1/sqrt(d) keeps tied-readout logits O(1) at init (rmsnorm'd features)
+    p = {"embedding": _truncnorm(key, (vocab, d), d ** -0.5, dtype)}
+    a = {"embedding": ("vocab", "embed")}
+    return p, a
+
+
+def embed_lookup(p, tokens):
+    return p["embedding"][tokens]
+
+
+def embed_logits(p, x):
+    """Tied read-out: x [.., d] @ E^T -> [.., vocab]."""
+    return x @ p["embedding"].T
+
+
+def stack_layer_params(key, n: int, init_one: Callable[[jax.Array], Tuple[Params, Axes]]):
+    """Initialize n copies of a layer and stack leaves along axis 0 (for
+    lax.scan over layers).  Axes get a leading 'layer' (unsharded) name."""
+    keys = jax.random.split(key, n)
+    ps, axs = [], None
+    for k in keys:
+        p, a = init_one(k)
+        ps.append(p)
+        axs = a
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *ps)
+    axes = jax.tree.map(lambda ax: ("layer",) + tuple(ax), axs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return stacked, axes
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size * x.dtype.itemsize) for x in jax.tree.leaves(params))

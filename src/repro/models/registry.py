@@ -1,0 +1,17 @@
+"""Family -> model module dispatch."""
+from __future__ import annotations
+
+from repro.models import encdec, hybrid, lm, ssm_lm
+
+_FAMILY_MODULES = {
+    "dense": lm,
+    "moe": lm,
+    "vlm": lm,
+    "ssm": ssm_lm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+def get_model(cfg):
+    return _FAMILY_MODULES[cfg.family]

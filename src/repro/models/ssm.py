@@ -1,0 +1,232 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul formulation.
+
+Training/prefill uses the SSD chunked algorithm (arXiv:2405.21060): within a
+chunk of length Q everything is dense matmuls (MXU-friendly); across chunks a
+small recurrent state h [B,G,Hg,P,N] is carried by ``lax.scan``.  Decode is
+the O(1)/token recurrence.  The chunk loop is a scan (not unrolled), so HLO
+stays small and the [Q,Q] intra-chunk score tensor is a bounded temp.
+
+Tensor parallelism (Megatron-style, head-aligned): the in-projection is SPLIT
+into z / x / BC / dt matrices so that per-head outputs (z, x, dt, A, D, norm,
+conv_x) shard over the ``model`` axis while the shared B/C streams stay
+replicated (G=1 for both assigned SSM archs); ``w_out`` is row-parallel
+(XLA inserts the reduce-scatter/all-reduce).  Grouped B/C (``ssm_groups``)
+is the SSM analog of GQA.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+class MambaState(NamedTuple):
+    """Decode-time recurrent state for one layer (stackable over layers)."""
+    h: jnp.ndarray          # f32[B, G, Hg, P, N] SSD state
+    conv_x: jnp.ndarray     # [B, W-1, di]        conv tail, x stream
+    conv_bc: jnp.ndarray    # [B, W-1, 2*G*N]     conv tail, B/C streams
+
+
+MAMBA_STATE_AXES = MambaState(
+    h=("batch", None, "ssm_heads", None, None),
+    conv_x=("batch", None, "ssm_inner"),
+    conv_bc=("batch", None, None),
+)
+
+
+def mamba_init(key, cfg, dtype):
+    d, di, N, G = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    H = cfg.ssm_heads
+    W = cfg.conv_width
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "w_z": nn._truncnorm(ks[0], (d, di), s, dtype),
+        "w_x": nn._truncnorm(ks[1], (d, di), s, dtype),
+        "w_bc": nn._truncnorm(ks[2], (d, 2 * G * N), s, dtype),
+        "w_dt": nn._truncnorm(ks[3], (d, H), s, dtype),
+        "conv_x_w": nn._truncnorm(ks[4], (W, di), 0.5, dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": nn._truncnorm(ks[5], (W, 2 * G * N), 0.5, dtype),
+        "conv_bc_b": jnp.zeros((2 * G * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.full((H,), math.log(math.e - 1), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "w_out": nn._truncnorm(ks[0], (di, d), 1.0 / math.sqrt(di), dtype),
+    }
+    a = {
+        "w_z": ("embed", "ssm_inner"),
+        "w_x": ("embed", "ssm_inner"),
+        "w_bc": ("embed", None),
+        "w_dt": ("embed", "ssm_heads"),
+        "conv_x_w": ("conv", "ssm_inner"),
+        "conv_x_b": ("ssm_inner",),
+        "conv_bc_w": ("conv", None),
+        "conv_bc_b": (None,),
+        "A_log": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "w_out": ("ssm_inner", "embed"),
+    }
+    return p, a
+
+
+def _causal_conv(x, w, b, tail):
+    """x [B,S,C]; w [W,C] depthwise causal conv; tail [B,W-1,C] history.
+    Returns (y, new_tail)."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    xp = jnp.concatenate([tail, x], axis=1)               # [B, S+W-1, C]
+    # depthwise conv as sum of W shifted scalings (W=4 — cheap, fusible)
+    y = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(W))
+    y = jax.nn.silu(y + b[None, None, :])
+    new_tail = xp[:, S:, :]
+    return y, new_tail
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, *, chunk: int, h0=None):
+    """SSD scan.  x [B,S,G,Hg,P]; dt [B,S,G,Hg] (softplus'd); A [G,Hg] (<0);
+    Bm/Cm [B,S,G,N]; D [G,Hg].  Returns (y [B,S,G,Hg,P], h_fin [B,G,Hg,P,N]).
+    """
+    Bsz, S, G, Hg, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    def to_chunks(t):
+        return t.reshape((Bsz, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    xs, dts, Bs, Cs = map(to_chunks, (x, dt, Bm, Cm))
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def one_chunk(h, inp):
+        xc, dtc, Bc, Cc = inp                # [B,Q,G,Hg,P], [B,Q,G,Hg], ...
+        dA = dtc * A[None, None]             # [B,Q,G,Hg]
+        A_cum = jnp.cumsum(dA, axis=1)
+        A_last = A_cum[:, -1]                # [B,G,Hg]
+        xdt = (xc * dtc[..., None]).astype(jnp.float32)
+        # inter-chunk: carried state contribution
+        y_inter = jnp.einsum("bqgn,bghpn->bqghp", Cc.astype(jnp.float32), h) \
+            * jnp.exp(A_cum)[..., None]
+        # intra-chunk: causal decay-weighted CB^T.  Mask BEFORE exp: masked
+        # (j>i) entries have positive exponents that overflow to inf and
+        # would poison the backward pass through where().
+        scores = jnp.einsum("bign,bjgn->bijg", Cc, Bc,
+                            preferred_element_type=jnp.float32)
+        Ldec = A_cum[:, :, None] - A_cum[:, None, :]      # [B,i,j,G,Hg]
+        Ldec = jnp.where(causal[None, :, :, None, None], Ldec, -1e30)
+        M = jnp.exp(Ldec) * scores[..., None]
+        y_intra = jnp.einsum("bijgh,bjghp->bighp", M, xdt)
+        # state update
+        decay_states = jnp.exp(A_last[:, None] - A_cum)   # [B,Q,G,Hg]
+        S_chunk = jnp.einsum("bqgn,bqghp->bghpn", Bc.astype(jnp.float32),
+                             xdt * decay_states[..., None])
+        h_new = h * jnp.exp(A_last)[..., None, None] + S_chunk
+        y = y_inter + y_intra + xc.astype(jnp.float32) * D[None, None, ..., None]
+        return h_new, y.astype(x.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, G, Hg, P, N), jnp.float32)
+    h_fin, ys = jax.lax.scan(one_chunk, h0, (xs, dts, Bs, Cs))
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, G, Hg, P)
+    return y, h_fin
+
+
+def _gate_norm_out(p, y, z, x_dtype):
+    """Mamba2 gated RMSNorm + out projection.  y,z [B,S,di]."""
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6)).astype(x_dtype) * p["norm"]
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"])
+
+
+def mamba_forward(p, x, cfg, *, state: MambaState | None = None,
+                  return_state: bool = False):
+    """Full-sequence forward.  x [B,S,d] -> [B,S,d] (+ final MambaState)."""
+    Bsz, S, d = x.shape
+    di, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    Hg = H // G
+
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    xs = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    bc = jnp.einsum("bsd,de->bse", x, p["w_bc"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])
+
+    tail_x = state.conv_x if state is not None else \
+        jnp.zeros((Bsz, cfg.conv_width - 1, di), x.dtype)
+    tail_bc = state.conv_bc if state is not None else \
+        jnp.zeros((Bsz, cfg.conv_width - 1, 2 * G * N), x.dtype)
+    xs, new_tail_x = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"], tail_x)
+    bc, new_tail_bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], tail_bc)
+
+    x_ssm = xs.reshape(Bsz, S, G, Hg, P)
+    Bm = bc[..., :G * N].reshape(Bsz, S, G, N)
+    Cm = bc[..., G * N:].reshape(Bsz, S, G, N)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"][None, None]).reshape(Bsz, S, G, Hg)
+    A = -jnp.exp(p["A_log"]).reshape(G, Hg)
+    h0 = state.h if state is not None else None
+
+    y, h_fin = ssd_chunked(x_ssm, dtp, A, Bm, Cm, p["D"].reshape(G, Hg),
+                           chunk=cfg.ssm_chunk, h0=h0)
+    out = _gate_norm_out(p, y.reshape(Bsz, S, di).astype(jnp.float32), z,
+                         x.dtype)
+    if return_state:
+        return out, MambaState(h=h_fin, conv_x=new_tail_x,
+                               conv_bc=new_tail_bc)
+    return out
+
+
+def mamba_decode_step(p, x, cfg, state: MambaState) -> Tuple[jnp.ndarray, MambaState]:
+    """One-token decode.  x [B,1,d] -> ([B,1,d], state')."""
+    Bsz = x.shape[0]
+    di, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    Hg = H // G
+
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    xs = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    bc = jnp.einsum("bsd,de->bse", x, p["w_bc"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])
+
+    xs, new_tail_x = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"],
+                                  state.conv_x)
+    bc, new_tail_bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"],
+                                   state.conv_bc)
+    x_ssm = xs[:, 0].reshape(Bsz, G, Hg, P)
+    Bm = bc[:, 0, :G * N].reshape(Bsz, G, N)
+    Cm = bc[:, 0, G * N:].reshape(Bsz, G, N)
+    dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"][None]).reshape(Bsz, G, Hg)
+    A = -jnp.exp(p["A_log"]).reshape(G, Hg)
+
+    dA = jnp.exp(dtp * A[None])                            # [B,G,Hg]
+    xdt = x_ssm.astype(jnp.float32) * dtp[..., None]
+    h_new = state.h * dA[..., None, None] + \
+        jnp.einsum("bgn,bghp->bghpn", Bm.astype(jnp.float32), xdt)
+    y = jnp.einsum("bgn,bghpn->bghp", Cm.astype(jnp.float32), h_new)
+    y = y + x_ssm.astype(jnp.float32) * p["D"].reshape(G, Hg)[None, ..., None]
+    # match the prefill path's bf16 round-trip (ssd_chunked casts y to the
+    # activation dtype) so decode == forward bitwise-closely
+    y = y.astype(x.dtype).astype(jnp.float32)
+    out = _gate_norm_out(p, y.reshape(Bsz, 1, di), z, x.dtype)
+    return out, MambaState(h=h_new, conv_x=new_tail_x, conv_bc=new_tail_bc)
+
+
+def init_mamba_state(cfg, batch: int, dtype) -> MambaState:
+    G, Hg = cfg.ssm_groups, cfg.ssm_heads // cfg.ssm_groups
+    return MambaState(
+        h=jnp.zeros((batch, G, Hg, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32),
+        conv_x=jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+        conv_bc=jnp.zeros((batch, cfg.conv_width - 1,
+                           2 * cfg.ssm_groups * cfg.ssm_state), dtype),
+    )

@@ -1,0 +1,56 @@
+"""Mamba2 LM (attention-free): embed -> scan of Mamba2 blocks -> logits."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.ctx import shard_act
+from repro.models import nn
+from repro.models import ssm
+
+
+def _layer_init(key, cfg, dtype):
+    p, a = ssm.mamba_init(key, cfg, dtype)
+    pn, an = nn.norm_init(cfg.d_model, dtype)
+    return {"mamba": p, "ln": pn}, {"mamba": a, "ln": an}
+
+
+def init(cfg, key) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    dtype = cfg.activation_dtype()
+    k_emb, k_layers = jax.random.split(key)
+    pe, ae = nn.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype)
+    stacked, axes = nn.stack_layer_params(
+        k_layers, cfg.num_layers, lambda k: _layer_init(k, cfg, dtype))
+    pn, an = nn.norm_init(cfg.d_model, dtype)
+    return ({"embed": pe, "layers": stacked, "final_norm": pn},
+            {"embed": ae, "layers": axes, "final_norm": an})
+
+
+def forward(cfg, params, tokens, *, remat: bool = False,
+            last_only: bool = False, **_):
+    B, S = tokens.shape
+    x = nn.embed_lookup(params["embed"], tokens)
+    x = shard_act(x, ("batch", "seq", None))
+
+    def body(x, layer_p):
+        h = ssm.mamba_forward(layer_p["mamba"],
+                              nn.rmsnorm(layer_p["ln"], x), cfg)
+        return shard_act(x + h, ("batch", "seq", None)), None
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    x, _ = jax.lax.scan(fn, x, params["layers"], unroll=cfg.scan_unroll)
+    if last_only:
+        x = x[:, -1:]
+    x = nn.rmsnorm(params["final_norm"], x)
+    logits = nn.embed_logits(params["embed"], x).astype(jnp.float32)
+    return shard_act(logits, ("batch", "seq", "vocab")), jnp.float32(0.0)
+
+
+def loss_fn(cfg, params, tokens, labels, *, remat: bool = True):
+    logits, _ = forward(cfg, params, tokens, remat=remat)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

@@ -1,0 +1,607 @@
+"""Decode engines: one ``serve_step`` per architecture family.
+
+The hash-table page table (serving/page_table) is consulted ONCE per step
+(alloc + wait-free lookup); page locality is compacted ONCE per chip
+(serving/paged.compact_local); every attention layer then reuses the same
+compacted page list — the paper's lookup is on the critical path exactly
+once per token, as in a production block-table.
+
+Sharding (SERVE_RULES): activations replicated (decode activations are
+KB-scale), weights TP-sharded over ``model``, page pools sharded over every
+mesh axis, SSM/ring state sharded over batch.  The paged attention op is a
+fully-manual shard_map; everything else is GSPMD.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import ctx
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import nn
+from repro.models import ssm
+from repro.serving import page_table as PT
+from repro.serving import paged
+from repro.core import batched as BT
+
+DEFAULT_PAGE_SIZE = 256
+
+
+# ---------------------------------------------------------------------------
+# Mesh helpers.
+
+def _mesh_axes(rules):
+    if rules is None:
+        return ()
+    return tuple(a for a in ("pod", "data", "model") if a in rules.mesh.shape)
+
+
+def _n_chips(rules) -> int:
+    if rules is None:
+        return 1
+    n = 1
+    for a in _mesh_axes(rules):
+        n *= rules.mesh.shape[a]
+    return n
+
+
+def _chip_idx(axes, mesh):
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# State construction.
+
+def plan_pages(cfg, B: int, S_max: int, page_size: int, n_chips: int):
+    max_pages = -(-S_max // page_size)
+    n_pages = paged.round_pages(int(B * max_pages * 1.25) + n_chips,
+                                n_chips)
+    return max_pages, n_pages
+
+
+def _n_attn_layers(cfg) -> Tuple[int, int]:
+    """(paged/global attention layers, ring/local attention layers)."""
+    if cfg.family == "ssm":
+        return 0, 0
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.shared_attn_every, 0
+    if cfg.pattern_local:
+        g = cfg.pattern_local + 1
+        return cfg.num_layers // g, cfg.num_layers - cfg.num_layers // g
+    return cfg.num_layers, 0
+
+
+def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
+                      page_size: int = DEFAULT_PAGE_SIZE,
+                      abstract: bool = False) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Decode-state pytree (+ logical axes).  ``abstract=True`` builds the
+    pytree under eval_shape — nothing is allocated (dry-run states can be
+    hundreds of GB)."""
+    n_chips = _n_chips(rules)
+    dtype = cfg.activation_dtype()
+    maxP, n_pages = plan_pages(cfg, B, S_max, page_size, n_chips)
+    n_paged, n_ring = _n_attn_layers(cfg)
+
+    def build() -> Dict[str, Any]:
+        state: Dict[str, Any] = {
+            "pos": jnp.zeros((B,), jnp.int32),
+            "seq_ids": jnp.arange(B, dtype=jnp.int32),
+        }
+        if n_paged:
+            state["table"] = PT.create_table(n_pages)
+            kv_dtype = (jnp.int8 if cfg.kv_cache_dtype == "int8"
+                        else dtype)
+            state["pools"] = paged.make_pools(n_paged, n_pages, page_size,
+                                              cfg.n_kv, cfg.hd, kv_dtype)
+            if cfg.kv_cache_dtype == "int8":
+                state["pool_scales"] = paged.make_pool_scales(
+                    n_paged, n_pages, page_size, cfg.n_kv)
+        if n_ring:
+            w = cfg.local_window
+            state["ring_k"] = jnp.zeros((n_ring, B, w, cfg.n_kv, cfg.hd),
+                                        dtype)
+            state["ring_v"] = jnp.zeros((n_ring, B, w, cfg.n_kv, cfg.hd),
+                                        dtype)
+            state["ring_pos"] = jnp.full((B, w), -1, jnp.int32)
+        if cfg.family in ("ssm", "hybrid"):
+            one = ssm.init_mamba_state(cfg, B, dtype)
+            state["ssm"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (cfg.num_layers,) + x.shape) + 0, one)
+        if cfg.family == "encdec":
+            S_src = max(S_max // 8, 1)
+            state["cross_k"] = jnp.zeros(
+                (cfg.num_layers, B, S_src, cfg.n_kv, cfg.hd), dtype)
+            state["cross_v"] = jnp.zeros(
+                (cfg.num_layers, B, S_src, cfg.n_kv, cfg.hd), dtype)
+        return state
+
+    axes: Dict[str, Any] = {"pos": (None,), "seq_ids": (None,)}
+    if n_paged:
+        axes["table"] = BT.HashTable(table=(None,), num_keys=(),
+                                     num_tombs=(), seed=())
+        axes["pools"] = paged.PagedPools(k=paged.POOL_AXES,
+                                         v=paged.POOL_AXES)
+        if cfg.kv_cache_dtype == "int8":
+            axes["pool_scales"] = paged.PoolScales(
+                k=paged.POOL_SCALE_AXES, v=paged.POOL_SCALE_AXES)
+    if n_ring:
+        axes["ring_k"] = ("layer", "batch", None, "kv", None)
+        axes["ring_v"] = ("layer", "batch", None, "kv", None)
+        axes["ring_pos"] = ("batch", None)
+    if cfg.family in ("ssm", "hybrid"):
+        is_ax = lambda x: (isinstance(x, tuple)
+                           and not isinstance(x, ssm.MambaState)
+                           and all(e is None or isinstance(e, str)
+                                   for e in x))
+        axes["ssm"] = jax.tree.map(lambda ax: ("layer",) + tuple(ax),
+                                   ssm.MAMBA_STATE_AXES, is_leaf=is_ax)
+    if cfg.family == "encdec":
+        axes["cross_k"] = ("layer", "batch", None, "kv", None)
+        axes["cross_v"] = ("layer", "batch", None, "kv", None)
+
+    state = jax.eval_shape(build) if abstract else build()
+    return state, axes
+
+
+# ---------------------------------------------------------------------------
+# The paged attention op (shard_map wrapper around serving/paged).
+
+def _rope_single(cfg, x, positions, mrope=None):
+    """x [B,H,hd] one token per seq at ``positions`` [B]."""
+    x4 = x[:, None]                                  # [B,1,H,hd]
+    if mrope is not None and cfg.mrope_sections:
+        out = L.apply_mrope(x4, mrope, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        out = L.apply_rope(x4, positions[:, None], cfg.rope_theta)
+    return out[:, 0]
+
+
+def _paged_attn_chip(cfg, x, ap, pool_k_l, pool_v_l, scales_l, lp_tree,
+                     write_slot, positions, mrope, *, axes_names, mesh,
+                     page_size, kv_sharded, q_sharded):
+    """Runs per chip (inside shard_map or standalone)."""
+    B = x.shape[0]
+    npr = pool_k_l.shape[0]
+    chip = _chip_idx(axes_names, mesh) if axes_names else jnp.int32(0)
+    lp = paged.LocalPages(*(t[0] for t in lp_tree))
+
+    q = jnp.einsum("bd,dhk->bhk", x[:, 0], ap["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x[:, 0], ap["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x[:, 0], ap["wv"])
+    if "bq" in ap:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    if axes_names and q_sharded:
+        q = jax.lax.all_gather(q, "model", axis=1, tiled=True)
+    if axes_names and kv_sharded:
+        k = jax.lax.all_gather(k, "model", axis=1, tiled=True)
+        v = jax.lax.all_gather(v, "model", axis=1, tiled=True)
+    q = _rope_single(cfg, q, positions, mrope)
+    k = _rope_single(cfg, k, positions, mrope)
+
+    pool_k_l, pool_v_l, scales_l = paged.write_token_kv(
+        pool_k_l, pool_v_l, k, v, write_slot, positions, chip, npr,
+        page_size, scales=scales_l)
+
+    n_kv, G = cfg.n_kv, cfg.n_q // cfg.n_kv
+    qg = q.reshape(B, n_kv, G, cfg.hd)
+    o, m, l = paged.attend_local(qg, pool_k_l, pool_v_l, lp, positions,
+                                 page_size, scales=scales_l)
+    out = paged.merge_global(o, m, l, axes_names)    # [B,kv,G,hd] f32
+    out = out.reshape(B, cfg.n_q, cfg.hd).astype(x.dtype)
+
+    if axes_names and q_sharded:
+        hl = cfg.n_q // mesh.shape["model"]
+        my = jax.lax.dynamic_slice_in_dim(
+            out, jax.lax.axis_index("model") * hl, hl, axis=1)
+        y = jnp.einsum("bhk,hkd->bd", my, ap["wo"])
+        y = jax.lax.psum(y, "model")
+    else:
+        y = jnp.einsum("bhk,hkd->bd", out, ap["wo"])
+    if scales_l is None:
+        scales_l = (jnp.zeros((), jnp.bfloat16),) * 2   # dummy pytree
+    return y[:, None], pool_k_l, pool_v_l, scales_l
+
+
+def paged_attn_op(cfg, rules, x, ap, pool_k_l, pool_v_l, lp_arrays,
+                  write_slot, positions, mrope=None,
+                  page_size: int = DEFAULT_PAGE_SIZE, scales_l=None):
+    """x [B,1,d]; pools [n_pages,...]; lp_arrays: LocalPages as [n_chips,CAP]
+    arrays.  Returns (attn_out [B,1,d], pool_k', pool_v', scales')."""
+    if rules is None:
+        lp_tree = tuple(t[:1] for t in lp_arrays)
+        return _paged_attn_chip(
+            cfg, x, ap, pool_k_l, pool_v_l, scales_l, lp_tree, write_slot,
+            positions, mrope, axes_names=(), mesh=None, page_size=page_size,
+            kv_sharded=False, q_sharded=False)
+
+    mesh = rules.mesh
+    axes_names = _mesh_axes(rules)
+    tp = mesh.shape.get("model", 1)
+    kv_sharded = cfg.n_kv % tp == 0 and tp > 1
+    q_sharded = cfg.n_q % tp == 0 and tp > 1
+    chips = P(axes_names)
+    h_spec = P(None, "model", None) if q_sharded else P()
+    kvw_spec = P(None, "model", None) if kv_sharded else P()
+    ap_specs = {"wq": h_spec, "wk": kvw_spec, "wv": kvw_spec,
+                "wo": P("model", None, None) if q_sharded else P()}
+    if "bq" in ap:
+        ap_specs.update({
+            "bq": P("model", None) if q_sharded else P(),
+            "bk": P("model", None) if kv_sharded else P(),
+            "bv": P("model", None) if kv_sharded else P()})
+    pool_spec = P(axes_names, None, None, None)
+    scale_spec = P(axes_names, None, None)
+    lp_specs = tuple(P(axes_names, None) for _ in lp_arrays)
+
+    fn = functools.partial(
+        _paged_attn_chip, cfg, axes_names=axes_names, mesh=mesh,
+        page_size=page_size, kv_sharded=kv_sharded, q_sharded=q_sharded)
+    scales_spec = ((scale_spec, scale_spec) if scales_l is not None
+                   else None)
+    out_scales_spec = (scales_spec if scales_l is not None
+                       else (P(), P()))
+    mapped = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(), ap_specs, pool_spec, pool_spec, scales_spec,
+                  lp_specs, P(), P(),
+                  P() if mrope is not None else None),
+        out_specs=(P(), pool_spec, pool_spec, out_scales_spec),
+        check_vma=False)
+    return mapped(x, ap, pool_k_l, pool_v_l, scales_l, lp_arrays,
+                  write_slot, positions, mrope)
+
+
+def compact_op(rules, slots, n_pages: int, cap: int):
+    """Per-chip page compaction, once per serve step.  Returns LocalPages as
+    [n_chips, CAP] arrays (chip-sharded when a mesh is active)."""
+    if rules is None:
+        lp = paged.compact_local(slots, 0, n_pages, cap)
+        return tuple(t[None] for t in lp)
+    mesh = rules.mesh
+    axes_names = _mesh_axes(rules)
+    n_chips = _n_chips(rules)
+    npr = n_pages // n_chips
+
+    def fn(slots):
+        chip = _chip_idx(axes_names, mesh)
+        lp = paged.compact_local(slots, chip, npr, cap)
+        return tuple(t[None] for t in lp)
+
+    mapped = jax.shard_map(
+        fn, mesh=mesh, in_specs=(P(),),
+        out_specs=tuple(P(axes_names, None) for _ in range(4)),
+        check_vma=False)
+    return mapped(slots)
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer (sliding window) attention for gemma3 local layers.
+
+def _ring_attn(cfg, x, ap, ring_k_l, ring_v_l, ring_pos, positions):
+    """x [B,1,d]; ring [B,W,kv,hd]; ring_pos [B,W] absolute positions."""
+    B = x.shape[0]
+    W = ring_k_l.shape[1]
+    q = jnp.einsum("bd,dhk->bhk", x[:, 0], ap["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x[:, 0], ap["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x[:, 0], ap["wv"])
+    if "bq" in ap:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q = _rope_single(cfg, q, positions)
+    k = _rope_single(cfg, k, positions)
+    slot = positions % W
+    ring_k_l = ring_k_l.at[jnp.arange(B), slot].set(k.astype(ring_k_l.dtype))
+    ring_v_l = ring_v_l.at[jnp.arange(B), slot].set(v.astype(ring_v_l.dtype))
+
+    n_kv, G = cfg.n_kv, cfg.n_q // cfg.n_kv
+    qg = q.reshape(B, n_kv, G, cfg.hd)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg.astype(jnp.float32),
+                   ring_k_l.astype(jnp.float32)) / math.sqrt(cfg.hd)
+    ok = (ring_pos >= 0) & (ring_pos <= positions[:, None]) & \
+        (ring_pos > positions[:, None] - W)
+    ok = ok.at[jnp.arange(B), slot].set(True)
+    s = jnp.where(ok[:, None, None, :], s, paged.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkd->bkgd", p, ring_v_l.astype(jnp.float32))
+    o = o.reshape(B, cfg.n_q, cfg.hd).astype(x.dtype)
+    y = jnp.einsum("bhk,hkd->bd", o, ap["wo"])
+    return y[:, None], ring_k_l, ring_v_l
+
+
+# ---------------------------------------------------------------------------
+# Cross attention at decode (encdec): dense precomputed memory K/V.
+
+def _cross_attn_decode(cfg, x, cp, ck, cv):
+    """x [B,1,d]; ck/cv [B,S_src,kv,hd]."""
+    B = x.shape[0]
+    q = jnp.einsum("bd,dhk->bhk", x[:, 0], cp["wq"])
+    if "bq" in cp:
+        q = q + cp["bq"]
+    n_kv, G = cfg.n_kv, cfg.n_q // cfg.n_kv
+    qg = q.reshape(B, n_kv, G, cfg.hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / math.sqrt(cfg.hd)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, cv.astype(jnp.float32))
+    o = o.reshape(B, cfg.n_q, cfg.hd).astype(x.dtype)
+    return jnp.einsum("bhk,hkd->bd", o, cp["wo"])[:, None]
+
+
+# ---------------------------------------------------------------------------
+# serve_step factories.
+
+def make_serve_step(cfg, *, S_max: int, rules=None,
+                    page_size: int = DEFAULT_PAGE_SIZE):
+    """Returns serve_step(params, state, tokens [B,1], positions [B],
+    [mrope_positions]) -> (logits [B,V], state')."""
+    n_chips = _n_chips(rules)
+    family = cfg.family
+
+    def serve_step(params, state, tokens, positions, mrope_positions=None):
+        with ctx.use_rules(rules):
+            return _serve_step_impl(cfg, params, state, tokens, positions,
+                                    mrope_positions, rules=rules,
+                                    S_max=S_max, page_size=page_size,
+                                    n_chips=n_chips)
+
+    return serve_step
+
+
+def _page_ops(cfg, state, positions, *, S_max, page_size, n_chips, rules):
+    maxP = -(-S_max // page_size)
+    table, write_slot = PT.alloc_step(state["table"], state["seq_ids"],
+                                      positions, page_size=page_size)
+    slots = PT.lookup_pages(table, state["seq_ids"], positions,
+                            page_size=page_size, max_pages=maxP)
+    B = positions.shape[0]
+    cap = paged.capacity(B, maxP, n_chips,
+                         factor=cfg.page_capacity_factor)
+    lp_arrays = compact_op(rules, slots, BT.size(table), cap)
+    return table, write_slot, lp_arrays
+
+
+def _scale_xs(cfg, state, n_layers):
+    """Per-layer scale arrays for the scan xs (dummies when bf16 pools)."""
+    if cfg.kv_cache_dtype == "int8":
+        sc = state["pool_scales"]
+        return sc.k, sc.v
+    z = jnp.zeros((n_layers,), jnp.bfloat16)
+    return z, z
+
+
+def _scales_in(cfg, sk_l, sv_l):
+    return (sk_l, sv_l) if cfg.kv_cache_dtype == "int8" else None
+
+
+def _mlp_or_moe(cfg, p, x):
+    if cfg.family == "moe":
+        y, _ = MOE.moe_apply(p["moe"], x, cfg)
+        return y
+    return L.mlp_apply(p["mlp"], x)
+
+
+def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
+                     *, rules, S_max, page_size, n_chips):
+    B = tokens.shape[0]
+    x = nn.embed_lookup(params["embed"], tokens)      # [B,1,d]
+    new_state = dict(state)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        table, write_slot, lp = _page_ops(cfg, state, positions, S_max=S_max,
+                                          page_size=page_size,
+                                          n_chips=n_chips, rules=rules)
+        new_state["table"] = table
+
+        if cfg.pattern_local:
+            x, pools, ring, scales = _gemma_layers(cfg, params, state, x,
+                                                   lp, write_slot,
+                                                   positions, rules,
+                                                   page_size)
+            new_state["pools"] = pools
+            new_state["ring_k"], new_state["ring_v"], new_state["ring_pos"] \
+                = ring
+            if scales is not None:
+                new_state["pool_scales"] = scales
+        else:
+            sk, sv = _scale_xs(cfg, state, cfg.num_layers)
+
+            def body(x, xs):
+                lp_params, pk, pv, sk_l, sv_l = xs
+                h, pk, pv, sc = paged_attn_op(
+                    cfg, rules, nn.rmsnorm(lp_params["ln1"], x), lp_params["attn"],
+                    pk, pv, lp, write_slot, positions, mrope, page_size,
+                    scales_l=_scales_in(cfg, sk_l, sv_l))
+                x = x + h
+                x = x + _mlp_or_moe(cfg, lp_params,
+                                    nn.rmsnorm(lp_params["ln2"], x))
+                return x, (pk, pv) + tuple(sc)
+
+            x, (pk, pv, sk2, sv2) = jax.lax.scan(
+                body, x, (params["layers"], state["pools"].k,
+                          state["pools"].v, sk, sv),
+                unroll=cfg.scan_unroll)
+            new_state["pools"] = paged.PagedPools(k=pk, v=pv)
+            if cfg.kv_cache_dtype == "int8":
+                new_state["pool_scales"] = paged.PoolScales(k=sk2, v=sv2)
+
+    elif cfg.family == "ssm":
+        def body(x, xs):
+            lp_params, st = xs
+            h, st2 = ssm.mamba_decode_step(
+                lp_params["mamba"], nn.rmsnorm(lp_params["ln"], x), cfg, st)
+            return x + h, st2
+
+        x, ssm2 = jax.lax.scan(body, x, (params["layers"], state["ssm"]),
+                               unroll=cfg.scan_unroll)
+        new_state["ssm"] = ssm2
+
+    elif cfg.family == "hybrid":
+        table, write_slot, lp = _page_ops(cfg, state, positions, S_max=S_max,
+                                          page_size=page_size,
+                                          n_chips=n_chips, rules=rules)
+        new_state["table"] = table
+        every = cfg.shared_attn_every
+        n_inv = cfg.num_layers // every
+
+        def mamba_chunk(x, states, lo, hi):
+            chunk_p = jax.tree.map(lambda t: t[lo:hi], params["layers"])
+            chunk_s = jax.tree.map(lambda t: t[lo:hi], states)
+
+            def body(x, xs):
+                lp_params, st = xs
+                h, st2 = ssm.mamba_decode_step(
+                    lp_params["mamba"], nn.rmsnorm(lp_params["ln"], x), cfg,
+                    st)
+                return x + h, st2
+
+            x, s2 = jax.lax.scan(body, x, (chunk_p, chunk_s),
+                                 unroll=(hi - lo) if cfg.unroll_layers else 1)
+            return x, s2
+
+        new_ssm_chunks = []
+        pk, pv = state["pools"].k, state["pools"].v
+        sk, sv = _scale_xs(cfg, state, n_inv)
+        pk_out, pv_out, sk_out, sv_out = [], [], [], []
+        sp = params["shared"]
+        for g in range(n_inv):
+            x, s2 = mamba_chunk(x, state["ssm"], g * every, (g + 1) * every)
+            new_ssm_chunks.append(s2)
+            h, pk_g, pv_g, sc = paged_attn_op(
+                cfg, rules, nn.rmsnorm(sp["ln1"], x), sp["attn"],
+                pk[g], pv[g], lp, write_slot, positions, None, page_size,
+                scales_l=_scales_in(cfg, sk[g], sv[g]))
+            x = x + h
+            x = x + L.mlp_apply(sp["mlp"], nn.rmsnorm(sp["ln2"], x))
+            pk_out.append(pk_g)
+            pv_out.append(pv_g)
+            sk_out.append(sc[0])
+            sv_out.append(sc[1])
+        rem = cfg.num_layers - n_inv * every
+        if rem:
+            x, s2 = mamba_chunk(x, state["ssm"], n_inv * every,
+                                cfg.num_layers)
+            new_ssm_chunks.append(s2)
+        new_state["ssm"] = jax.tree.map(
+            lambda *ts: jnp.concatenate(ts, axis=0), *new_ssm_chunks)
+        new_state["pools"] = paged.PagedPools(k=jnp.stack(pk_out),
+                                              v=jnp.stack(pv_out))
+        if cfg.kv_cache_dtype == "int8":
+            new_state["pool_scales"] = paged.PoolScales(
+                k=jnp.stack(sk_out), v=jnp.stack(sv_out))
+
+    elif cfg.family == "encdec":
+        table, write_slot, lp = _page_ops(cfg, state, positions, S_max=S_max,
+                                          page_size=page_size,
+                                          n_chips=n_chips, rules=rules)
+        new_state["table"] = table
+
+        sk, sv = _scale_xs(cfg, state, cfg.num_layers)
+
+        def body(x, xs):
+            lp_params, pk, pv, sk_l, sv_l, ck, cv = xs
+            h, pk, pv, sc = paged_attn_op(
+                cfg, rules, nn.rmsnorm(lp_params["ln1"], x),
+                lp_params["attn"], pk, pv, lp, write_slot, positions, None,
+                page_size, scales_l=_scales_in(cfg, sk_l, sv_l))
+            x = x + h
+            x = x + _cross_attn_decode(cfg, nn.rmsnorm(lp_params["ln_cross"], x),
+                                       lp_params["cross"], ck, cv)
+            x = x + L.mlp_apply(lp_params["mlp"],
+                                nn.rmsnorm(lp_params["ln2"], x))
+            return x, (pk, pv) + tuple(sc)
+
+        x, (pk, pv, sk2, sv2) = jax.lax.scan(
+            body, x, (params["decoder"], state["pools"].k, state["pools"].v,
+                      sk, sv, state["cross_k"], state["cross_v"]),
+            unroll=cfg.scan_unroll)
+        new_state["pools"] = paged.PagedPools(k=pk, v=pv)
+        if cfg.kv_cache_dtype == "int8":
+            new_state["pool_scales"] = paged.PoolScales(k=sk2, v=sv2)
+    else:
+        raise ValueError(cfg.family)
+
+    x = nn.rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = nn.embed_logits(params["embed"], x)
+    else:
+        logits = nn.dense(params["lm_head"], x)
+    new_state["pos"] = positions + 1
+    return logits[:, 0].astype(jnp.float32), new_state
+
+
+def prepare_encdec_state(cfg, params, state, src_embeds, *, rules=None):
+    """Run the encoder and fill the decoder's cross K/V (the enc-dec
+    'prefill').  src_embeds [B, S_src, d] (stub audio frontend)."""
+    from repro.models import encdec
+    with ctx.use_rules(rules):
+        memory = encdec.encode(cfg, params, src_embeds)
+
+        def one_layer(lp_params):
+            cp = lp_params["cross"]
+            k = jnp.einsum("bsd,dhk->bshk", memory, cp["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", memory, cp["wv"])
+            if "bk" in cp:
+                k, v = k + cp["bk"], v + cp["bv"]
+            return k, v
+
+        ck, cv = jax.vmap(one_layer)(params["decoder"])
+    state = dict(state)
+    state["cross_k"], state["cross_v"] = ck, cv
+    return state
+
+
+def _gemma_layers(cfg, params, state, x, lp, write_slot, positions, rules,
+                  page_size):
+    """gemma3 superblocks at decode: pattern_local ring layers + 1 paged."""
+    pat = cfg.pattern_local
+    group = pat + 1
+    ng = cfg.num_layers // group
+    stacked = jax.tree.map(
+        lambda t: t.reshape((ng, group) + t.shape[1:]), params["layers"])
+    B, W = state["ring_pos"].shape
+    ring_k = state["ring_k"].reshape((ng, pat) + state["ring_k"].shape[1:])
+    ring_v = state["ring_v"].reshape((ng, pat) + state["ring_v"].shape[1:])
+
+    sk, sv = _scale_xs(cfg, state, ng)
+
+    def body(x, xs):
+        grp, rks, rvs, pk, pv, sk_l, sv_l = xs
+        new_rk, new_rv = [], []
+        for i in range(pat):
+            sub = jax.tree.map(lambda t: t[i], grp)
+            h, rk2, rv2 = _ring_attn(cfg, nn.rmsnorm(sub["ln1"], x),
+                                     sub["attn"], rks[i], rvs[i],
+                                     state["ring_pos"], positions)
+            x = x + h
+            x = x + L.mlp_apply(sub["mlp"], nn.rmsnorm(sub["ln2"], x))
+            new_rk.append(rk2)
+            new_rv.append(rv2)
+        sub = jax.tree.map(lambda t: t[pat], grp)
+        h, pk, pv, sc = paged_attn_op(cfg, rules, nn.rmsnorm(sub["ln1"], x),
+                                      sub["attn"], pk, pv, lp, write_slot,
+                                      positions, None, page_size,
+                                      scales_l=_scales_in(cfg, sk_l, sv_l))
+        x = x + h
+        x = x + L.mlp_apply(sub["mlp"], nn.rmsnorm(sub["ln2"], x))
+        return x, (jnp.stack(new_rk), jnp.stack(new_rv), pk, pv) + tuple(sc)
+
+    x, (rk, rv, pk, pv, sk2, sv2) = jax.lax.scan(
+        body, x, (stacked, ring_k, ring_v, state["pools"].k,
+                  state["pools"].v, sk, sv),
+        unroll=ng if cfg.unroll_layers else 1)
+    rk = rk.reshape((ng * pat,) + rk.shape[2:])
+    rv = rv.reshape((ng * pat,) + rv.shape[2:])
+    ring_pos = state["ring_pos"].at[jnp.arange(B), positions % W].set(
+        positions)
+    scales = (paged.PoolScales(k=sk2, v=sv2)
+              if cfg.kv_cache_dtype == "int8" else None)
+    return x, paged.PagedPools(k=pk, v=pv), (rk, rv, ring_pos), scales

@@ -1,0 +1,113 @@
+"""The paper's hash table as the paged-KV page table / allocator.
+
+The linear-probing table IS the allocator: the table has one cell per
+physical KV page, keyed by ``(seq_id, logical_page)``; *claiming cell i
+allocates physical page i*.  The paper's operations map 1:1 onto the
+serving runtime:
+
+* ``insert`` — page allocation (one per sequence per ``page_size`` tokens);
+  probe-order arbitration resolves races between concurrent allocations.
+* wait-free ``lookup`` — the block-table read on EVERY decode step's
+  critical path (kernels/probe is the Pallas fast path).
+* ``delete`` — sequence eviction: all its pages become TOMBSTONEs, and
+  **tombstone reuse** (the paper's headline) means freed page slots are
+  re-claimed by later allocations directly — no compaction, no rebuild,
+  no fragmentation sweep.  This is Proposition 2 operating as a memory
+  allocator.
+
+Key packing: key = seq_id * MAX_LOGICAL_PAGES + logical_page (28-bit key
+space from core/encoding: seq_id < 2^17 with 2^11 logical pages covers
+500k-token contexts at page_size 256).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batched as BT
+from repro.core import encoding as E
+
+MAX_LOGICAL_PAGES = 2048  # 2^11 -> 500k tokens at page_size 256
+
+
+def page_key(seq_ids, logical_pages):
+    return (jnp.asarray(seq_ids, jnp.uint32) * jnp.uint32(MAX_LOGICAL_PAGES)
+            + jnp.asarray(logical_pages, jnp.uint32))
+
+
+def create_table(n_pages: int, seed: int = 0) -> BT.HashTable:
+    return BT.create(n_pages, seed=seed)
+
+
+def alloc_step(table: BT.HashTable, seq_ids, positions, *,
+               page_size: int) -> Tuple[BT.HashTable, jnp.ndarray]:
+    """Per decode step: allocate the page for each sequence's current
+    position when it crosses a page boundary.  Returns (table', write_slot
+    int32[B] — the physical page the new token's KV goes to)."""
+    page_idx = positions // page_size
+    need_new = (positions % page_size) == 0
+    keys = page_key(seq_ids, page_idx)
+    table, _ = BT.insert_batch(table, keys, active=need_new)
+    found, slots = BT.find_batch(table, keys)
+    # a miss here means the allocator aborted (pool exhausted) — surface -1
+    return table, jnp.where(found, slots, -1)
+
+
+def lookup_pages(table: BT.HashTable, seq_ids, positions, *,
+                 page_size: int, max_pages: int) -> jnp.ndarray:
+    """Wait-free block-table read: physical slot of every logical page of
+    every sequence (-1 where absent/not-yet-needed).  [B, max_pages]."""
+    B = seq_ids.shape[0]
+    logical = jnp.arange(max_pages, dtype=jnp.uint32)
+    keys = page_key(seq_ids[:, None], logical[None, :]).reshape(-1)
+    found, slots = BT.find_batch(table, keys)
+    slots = slots.reshape(B, max_pages)
+    found = found.reshape(B, max_pages)
+    live = logical[None, :] <= (positions[:, None] // page_size)
+    return jnp.where(found & live, slots, -1)
+
+
+def free_sequences(table: BT.HashTable, seq_ids, positions, *,
+                   page_size: int, max_pages: int,
+                   active=None) -> BT.HashTable:
+    """Evict sequences: delete all their page keys -> tombstones -> slots
+    immediately reusable by subsequent alloc_steps (no rebuild)."""
+    B = seq_ids.shape[0]
+    logical = jnp.arange(max_pages, dtype=jnp.uint32)
+    keys = page_key(seq_ids[:, None], logical[None, :]).reshape(-1)
+    act = jnp.broadcast_to(
+        (logical[None, :] <= positions[:, None] // page_size) &
+        (jnp.ones((B, 1), bool) if active is None
+         else jnp.asarray(active, bool)[:, None]),
+        (B, max_pages)).reshape(-1)
+    table, _ = BT.delete_batch(table, keys, active=act)
+    return table
+
+
+def prefill_alloc(table: BT.HashTable, seq_ids, lengths, *,
+                  page_size: int, max_pages: int
+                  ) -> Tuple[BT.HashTable, jnp.ndarray]:
+    """Allocate all pages for freshly prefilling sequences.  Returns
+    (table', slots [B, max_pages])."""
+    B = seq_ids.shape[0]
+    logical = jnp.arange(max_pages, dtype=jnp.uint32)
+    keys = page_key(seq_ids[:, None], logical[None, :]).reshape(-1)
+    need = (logical[None, :] * page_size < lengths[:, None]).reshape(-1)
+    table, _ = BT.insert_batch(table, keys, active=need)
+    found, slots = BT.find_batch(table, keys)
+    slots = jnp.where(found & need, slots, -1)
+    return table, slots.reshape(B, max_pages)
+
+
+class PageTableStats(NamedTuple):
+    live_pages: jnp.ndarray
+    tombstones: jnp.ndarray
+    occupancy: jnp.ndarray
+
+
+def stats(table: BT.HashTable) -> PageTableStats:
+    return PageTableStats(live_pages=table.num_keys,
+                          tombstones=table.num_tombs,
+                          occupancy=BT.occupancy(table))

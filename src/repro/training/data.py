@@ -1,0 +1,112 @@
+"""Deterministic, restart-safe synthetic data pipeline with hash-table-based
+n-gram dedup.
+
+Batches are a pure function of (seed, step): restoring a checkpoint needs
+only the step counter — no iterator state, no host-side files.  Token
+streams are Zipf-distributed (realistic softmax/embedding access skew).
+
+Dedup (the paper's table in the data path): every sequence contributes
+8-gram fingerprints; a batched lock-free-analog hash table (core/batched)
+keeps the seen-set — duplicate-heavy sequences are masked out of the loss.
+Tombstone reuse lets the dedup window *slide* (old fingerprints deleted,
+cells reclaimed) without ever rebuilding the table — exactly the paper's
+space story, in the substrate.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batched as BT
+
+
+def synth_batch(cfg, *, batch: int, seq_len: int, step: int,
+                seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Batch of next-token LM data: tokens [B,S] and labels (shift-by-one)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    # Zipf-ish marginal over the vocab via exponential transform
+    u = jax.random.uniform(key, (batch, seq_len + 1), minval=1e-6)
+    ranks = jnp.floor(jnp.exp(jnp.log(float(cfg.vocab_size)) * u)) - 1
+    toks = jnp.clip(ranks.astype(jnp.int32), 0, cfg.vocab_size - 1)
+    out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.family == "encdec":
+        k2 = jax.random.fold_in(key, 1)
+        out["src_embeds"] = jax.random.normal(
+            k2, (batch, max(seq_len // 8, 1), cfg.d_model),
+            cfg.activation_dtype())
+    if cfg.family == "vlm":
+        k3 = jax.random.fold_in(key, 2)
+        n_patch = min(256, seq_len // 2)
+        out["patch_embeds"] = jax.random.normal(
+            k3, (batch, n_patch, cfg.d_model), cfg.activation_dtype())
+        pos = jnp.arange(seq_len)[None, None]
+        out["mrope_positions"] = jnp.broadcast_to(
+            pos, (3, batch, seq_len)).astype(jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# n-gram dedup on the paper's hash table.
+
+NGRAM = 8
+FPR_PER_SEQ = 16  # fingerprints sampled per sequence
+
+
+def _fingerprints(tokens: jnp.ndarray, n: int = NGRAM,
+                  k: int = FPR_PER_SEQ) -> jnp.ndarray:
+    """tokens [B,S] -> uint32[B,k] rolling-hash n-gram fingerprints at k
+    evenly spaced offsets."""
+    B, S = tokens.shape
+    offs = jnp.linspace(0, max(S - n - 1, 0), k).astype(jnp.int32)
+    idx = offs[None, :, None] + jnp.arange(n)[None, None, :]   # [1,k,n]
+    grams = jnp.take_along_axis(
+        tokens[:, None, :], jnp.broadcast_to(idx, (B, k, n)), axis=2)
+    h = jnp.zeros((B, k), jnp.uint32)
+    for i in range(n):
+        h = h * jnp.uint32(0x01000193) ^ grams[:, :, i].astype(jnp.uint32)
+    return h % jnp.uint32(BT.E.MAX_KEY)
+
+
+class DedupState:
+    """Sliding-window dedup: fingerprints inserted now are deleted
+    ``window`` batches later (tombstone reuse keeps occupancy bounded)."""
+
+    def __init__(self, m: int = 1 << 16, window: int = 64):
+        self.table = BT.create(m, seed=7)
+        self.window = window
+        self.ring: list = []
+
+    def filter_batch(self, tokens: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (keep_mask bool[B], dup_frac scalar).  A sequence is a
+        duplicate if most of its fingerprints are already in the table."""
+        fps = _fingerprints(tokens)
+        B, k = fps.shape
+        flat = fps.reshape(-1)
+        seen = BT.lookup_batch(self.table, flat).reshape(B, k)
+        dup_frac = jnp.mean(seen, axis=1)
+        keep = dup_frac < 0.5
+        self.table, _ = BT.insert_batch(self.table, flat)
+        self.ring.append(flat)
+        if len(self.ring) > self.window:
+            old = self.ring.pop(0)
+            self.table, _ = BT.delete_batch(self.table, old)
+        return keep, jnp.mean(dup_frac)
+
+
+def make_batch_iterator(cfg, *, batch: int, seq_len: int, seed: int = 0,
+                        start_step: int = 0, dedup: Optional[DedupState] = None):
+    """Stateless-per-step iterator (restart-safe); optional dedup masking
+    (keep mask multiplies the loss weights downstream)."""
+    step = start_step
+    while True:
+        b = synth_batch(cfg, batch=batch, seq_len=seq_len, step=step,
+                        seed=seed)
+        if dedup is not None:
+            keep, frac = dedup.filter_batch(b["tokens"])
+            b["keep"] = keep
+            b["dup_frac"] = frac
+        yield step, b
+        step += 1

@@ -1,0 +1,17 @@
+"""Pytest hygiene: drop JAX's compiled-executable caches between test
+modules.  The suite compiles hundreds of programs (ten architectures x
+train/decode engines x schedulers); on a CPU host the accumulated LLVM
+executables otherwise exhaust memory late in the run ("LLVM compilation
+error: Cannot allocate memory").  Per the dry-run isolation rule, this file
+must NOT set XLA_FLAGS / device counts."""
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config
+of each family runs one forward and one train step on CPU; output shapes and
+finiteness asserted.  The FULL configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import SHAPES, cell_applicable, input_specs
+from repro.models.registry import get_model
+from repro.training import data as D
+from repro.training.train_step import init_state, make_train_step
+
+ALL_ARCHS = sorted(ARCH_IDS)
+
+
+def _extra_inputs(cfg, B, S, key):
+    kw = {}
+    if cfg.family == "encdec":
+        kw["src_embeds"] = jax.random.normal(
+            key, (B, max(S // 8, 1), cfg.d_model), cfg.activation_dtype())
+    if cfg.family == "vlm":
+        kw["patch_embeds"] = jax.random.normal(
+            key, (B, S // 4, cfg.d_model), cfg.activation_dtype())
+        kw["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+    return kw
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params, axes = model.init(cfg, key)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits, aux = model.forward(cfg, params, tokens,
+                                **_extra_inputs(cfg, B, S, key))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert jnp.isfinite(logits).all()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    state, _ = init_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg))
+    for i in range(2):
+        batch = D.synth_batch(cfg, batch=2, seq_len=32, step=i)
+        state, metrics = step(state, batch)
+        assert jnp.isfinite(metrics["loss"])
+        assert jnp.isfinite(metrics["grad_norm"])
+    assert int(state.step) == 2
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_exact_numbers(arch):
+    """The full config must carry the exact published numbers."""
+    cfg = get_config(arch)
+    published = {
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == published, (arch, got, published)
+    # family extras
+    if arch == "granite-moe-1b-a400m":
+        assert (cfg.num_experts, cfg.experts_per_token) == (32, 8)
+    if arch == "qwen3-moe-235b-a22b":
+        assert (cfg.num_experts, cfg.experts_per_token) == (128, 8)
+    if arch == "zamba2-1.2b":
+        assert cfg.ssm_state == 64
+    if arch == "mamba2-2.7b":
+        assert cfg.ssm_state == 128
+    if arch == "gemma3-12b":
+        assert (cfg.pattern_local, cfg.local_window) == (5, 1024)
+    if arch == "qwen2-vl-7b":
+        assert cfg.mrope_sections == (16, 24, 24)
+
+
+def test_long_500k_applicability():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §6)."""
+    runnable = {a for a in ALL_ARCHS
+                if cell_applicable(get_config(a), SHAPES["long_500k"])[0]}
+    assert runnable == {"zamba2-1.2b", "mamba2-2.7b", "gemma3-12b"}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_input_specs_defined(arch, shape):
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    specs = input_specs(cfg, sh)
+    assert "tokens" in specs
+    for k, sds in specs.items():
+        assert all(d > 0 for d in sds.shape), (k, sds.shape)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_count_sane(arch):
+    """Analytic N lands near the advertised size class."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "zamba2-1.2b": 1.2e9, "qwen1.5-32b": 32e9, "qwen2.5-32b": 32e9,
+        "gemma3-12b": 12e9, "codeqwen1.5-7b": 7e9,
+        "seamless-m4t-large-v2": 2.3e9, "granite-moe-1b-a400m": 1.3e9,
+        "qwen3-moe-235b-a22b": 235e9, "mamba2-2.7b": 2.7e9,
+        "qwen2-vl-7b": 7e9,
+    }[arch]
+    assert 0.4 * expected < n < 1.9 * expected, (arch, n, expected)

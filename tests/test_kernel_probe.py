@@ -1,0 +1,74 @@
+"""Probe-lookup kernel vs jnp oracle (interpret mode), shape/load sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batched as BT
+from repro.kernels.probe import probe_lookup, probe_lookup_ref, resolved_fraction
+
+
+def build_table(m, n_keys, seed, key_range=None, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    ht = BT.create(m, seed=seed)
+    key_range = key_range or 10 * m
+    keys = rng.choice(key_range, size=n_keys, replace=False).astype(np.uint32)
+    ht, ret = BT.insert_batch(ht, jnp.asarray(keys))
+    assert not np.any(np.asarray(ret) == 2)
+    return ht, keys
+
+
+@pytest.mark.parametrize("m,TB,KT", [(512, 256, 128), (4096, 2048, 128),
+                                     (4096, 256, 128), (2048, 1024, 64)])
+@pytest.mark.parametrize("load", [0.3, 0.7, 0.9])
+def test_kernel_matches_ref(m, TB, KT, load):
+    ht, keys = build_table(m, int(m * load), seed=7, rng_seed=m + int(load * 10))
+    rng = np.random.default_rng(1)
+    B = 512
+    # half present, half absent
+    qk = np.concatenate([
+        rng.choice(keys, size=B // 2),
+        rng.integers(10 * m, 20 * m, size=B // 2),
+    ]).astype(np.uint32)
+    rng.shuffle(qk)
+    qk = jnp.asarray(qk)
+    f_ref, s_ref = probe_lookup_ref(ht.table, qk, int(ht.seed))
+    f_k, s_k = probe_lookup(ht, qk, TB=TB, KT=KT, interpret=True)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_ref))
+
+
+def test_kernel_with_tombstones_and_wrap():
+    """Runs crossing the m boundary and tombstones in runs."""
+    m, TB = 512, 256
+    ht, keys = build_table(m, 400, seed=3, rng_seed=42)
+    # delete a third of them -> tombstones inside runs
+    ht, _ = BT.delete_batch(ht, jnp.asarray(keys[::3].copy()))
+    rng = np.random.default_rng(2)
+    qk = jnp.asarray(np.concatenate([keys, rng.integers(10 * m, 20 * m,
+                                                        size=256)])
+                     .astype(np.uint32))
+    f_ref, s_ref = probe_lookup_ref(ht.table, qk, int(ht.seed))
+    f_k, s_k = probe_lookup(ht, qk, TB=TB, interpret=True)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_ref))
+
+
+def test_small_batches_and_padding():
+    m, TB = 1024, 256
+    ht, keys = build_table(m, 300, seed=9, rng_seed=5)
+    for B in [1, 3, 64, 130]:
+        qk = jnp.asarray(keys[:B].astype(np.uint32))
+        f_ref, s_ref = probe_lookup_ref(ht.table, qk, int(ht.seed))
+        f_k, s_k = probe_lookup(ht, qk, TB=TB, interpret=True)
+        np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_ref))
+
+
+def test_fast_path_coverage():
+    """At moderate load the kernel should resolve nearly all keys itself."""
+    m = 8192
+    ht, keys = build_table(m, int(0.6 * m), seed=11, rng_seed=8)
+    rng = np.random.default_rng(3)
+    qk = jnp.asarray(rng.choice(keys, size=1024).astype(np.uint32))
+    frac = float(resolved_fraction(ht, qk, TB=2048, interpret=True))
+    assert frac > 0.95, frac

@@ -1,0 +1,194 @@
+"""Correctness tests for the faithful concurrent simulator (Algorithms 1-6)."""
+import numpy as np
+import pytest
+
+from repro.core import encoding as E
+from repro.core import hashing as H
+from repro.core import schedulers as S
+from repro.core import simulator as sim
+from repro.core.linearizability import check_history
+from repro.core.spec import (OP_DELETE, OP_INSERT, OP_LOOKUP, RET_ABORT,
+                             RET_FALSE, RET_PENDING, RET_TRUE,
+                             apply_sequential)
+
+MODES = [sim.MODE_LLSC, sim.MODE_CAS]
+
+
+def run(wl, m, schedule, mode, seed=0, check_inv=False):
+    st = sim.simulate(wl, m, schedule, mode=mode, hash_seed=seed,
+                      check_inv=check_inv)
+    return st
+
+
+def finished(st, wl):
+    res = np.asarray(st.results)
+    op = np.asarray(wl.op)
+    return np.all((res != RET_PENDING) | (op == -1))
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", MODES)
+def test_sequential_matches_spec(mode):
+    """Single process, any schedule = sequential execution: results must
+    exactly match the abstract dictionary."""
+    rng = np.random.default_rng(0)
+    for trial in range(10):
+        K = 40
+        wl = S.random_workload(rng, P=1, K=K, num_keys=8)
+        m = 32
+        sched = np.zeros(5000, dtype=np.int32)
+        st = run(wl, m, sched, mode, seed=trial)
+        assert finished(st, wl)
+        _, expect = apply_sequential(
+            [(int(wl.op[0, k]), int(wl.key[0, k])) for k in range(K)])
+        got = list(np.asarray(st.results)[0])
+        assert got == expect, f"trial {trial}: {got} vs {expect}"
+        assert bool(st.pair_ok)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_sequential_tombstone_reuse(mode):
+    """insert/delete churn of distinct keys in a tiny table must never abort:
+    tombstones are reused (the paper's headline difference vs [7,14])."""
+    m = 8
+    K = 64
+    ops, keys = [], []
+    for t in range(K // 2):
+        ops += [OP_INSERT, OP_DELETE]
+        keys += [100 + t, 100 + t]
+    wl = sim.Workload(op=np.array([ops], dtype=np.int32),
+                      key=np.array([keys], dtype=np.uint32))
+    st = run(wl, m, np.zeros(4000, dtype=np.int32), mode)
+    assert finished(st, wl)
+    res = np.asarray(st.results)[0]
+    assert np.all(res == RET_TRUE), res  # every insert & delete succeeds
+    assert not np.any(res == RET_ABORT)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_solo_insert_never_aborts_with_space(mode):
+    """Proposition 2 corollary: a solo insert with a free/tombstone cell
+    available does not abort."""
+    rng = np.random.default_rng(3)
+    m = 8
+    # fill m-1 keys, delete some, then insert new ones
+    ops = [OP_INSERT] * (m - 1) + [OP_DELETE] * 3 + [OP_INSERT] * 3
+    keys = list(range(1, m)) + [1, 2, 3] + [50, 51, 52]
+    wl = sim.Workload(op=np.array([ops], dtype=np.int32),
+                      key=np.array([keys], dtype=np.uint32))
+    st = run(wl, m, np.zeros(3000, dtype=np.int32), mode)
+    assert finished(st, wl)
+    res = np.asarray(st.results)[0]
+    assert np.all(res == RET_TRUE)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_abort_when_full(mode):
+    """Insert into a truly full table returns ABORT and changes nothing."""
+    m = 4
+    ops = [OP_INSERT] * m + [OP_INSERT]
+    keys = [1, 2, 3, 4, 99]
+    wl = sim.Workload(op=np.array([ops], dtype=np.int32),
+                      key=np.array([keys], dtype=np.uint32))
+    st = run(wl, m, np.zeros(2000, dtype=np.int32), mode)
+    assert finished(st, wl)
+    res = np.asarray(st.results)[0]
+    assert list(res[:m]) == [RET_TRUE] * m
+    assert res[m] == RET_ABORT
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("sched_kind", ["uniform", "bursty", "stalled", "rr"])
+def test_concurrent_linearizable(mode, sched_kind):
+    """Random concurrent executions are linearizable and preserve the
+    invariants (Lemma 4 + Proposition 3)."""
+    rng = np.random.default_rng(hash((mode, sched_kind)) % 2**31)
+    for trial in range(8):
+        P, K, m = 3, 5, 16
+        wl = S.random_workload(rng, P=P, K=K, num_keys=5)
+        T = 4000
+        if sched_kind == "uniform":
+            sched = S.uniform_schedule(rng, P, T)
+        elif sched_kind == "bursty":
+            sched = S.bursty_schedule(rng, P, T)
+        elif sched_kind == "stalled":
+            sched = S.stalled_schedule(rng, P, T)
+        else:
+            sched = S.round_robin_schedule(P, T)
+        st = run(wl, m, sched, mode, seed=trial, check_inv=True)
+        assert bool(st.pair_ok), f"LL/SC pairing violated ({mode},{trial})"
+        assert bool(st.inv_ok), f"Lemma4/Prop3 violated ({mode},{trial})"
+        rows = sim.history_arrays(st, wl)
+        ok, bad = check_history(rows)
+        assert ok, (f"non-linearizable keys {bad} ({mode},{sched_kind},"
+                    f"{trial}): {rows}")
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_same_key_stress(mode):
+    """All processes hammer one key (Figure 2 scenarios): duplicate copies
+    must be resolved; history must remain linearizable."""
+    rng = np.random.default_rng(7)
+    for trial in range(10):
+        P, K, m = 3, 4, 8
+        wl = S.same_key_workload(P, K, key=5, pattern="insert_delete")
+        sched = S.uniform_schedule(rng, P, 6000)
+        st = run(wl, m, sched, mode, seed=trial, check_inv=True)
+        assert bool(st.inv_ok)
+        assert bool(st.pair_ok)
+        rows = sim.history_arrays(st, wl)
+        ok, bad = check_history(rows)
+        assert ok, f"({mode}, trial {trial}): {rows}"
+        # after everything completes, at most one copy of the key remains
+        if finished(st, wl):
+            tab = np.asarray(st.table)
+            copies = np.sum(E.dec_key(tab) == 5)
+            assert copies <= 1, tab
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_step_accounting(mode):
+    """Each completed op consumed >= 2 memory events (scan + action)."""
+    rng = np.random.default_rng(11)
+    wl = S.random_workload(rng, P=2, K=6, num_keys=4)
+    st = run(wl, 16, S.uniform_schedule(rng, 2, 3000), mode)
+    steps = np.asarray(st.steps)
+    res = np.asarray(st.results)
+    assert np.all(steps[res != RET_PENDING] >= 1)
+    assert steps.sum() <= 3000
+
+
+def test_encoding_roundtrip():
+    for v in [0, 1, 12345, E.MAX_KEY]:
+        assert int(E.dec_key(E.enc_tentative(v))) == v
+        assert int(E.dec_tag(E.enc_final(v))) == E.TAG_FINAL
+        assert bool(E.restart(E.enc_revalidate(v)))
+        assert bool(E.is_marked(E.enc_marked(v)))
+        assert not bool(E.is_marked(E.enc_revalidate(v)))
+    for c in [E.EMPTY, E.TOMBSTONE, E.DELETED, E.COLLIDED]:
+        assert int(E.dec_key(np.uint32(c))) == E.RESERVED_KEY
+        assert not bool(E.restart(np.uint32(c)))
+    assert bool(E.is_available(np.uint32(E.EMPTY)))
+    assert bool(E.is_available(np.uint32(E.TOMBSTONE)))
+    assert not bool(E.is_available(np.uint32(E.DELETED)))
+
+
+def test_cell_size_accounting():
+    """Theorem 1 bit counts."""
+    cs = E.cell_size_llsc(U=2**20)
+    assert cs.total == 21 + 2 == 23  # ceil(log2(2^20+1)) = 21
+    cs2 = E.cell_size_cas(U=2**20, n=64, m=2**16)
+    assert cs2.owner_bits == 6
+    assert cs2.total == 21 + 2 + 6
+
+
+def test_hashing_range():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**28 - 2, size=1000).astype(np.uint32)
+    for m in [16, 64, 100, 1 << 12]:
+        h = np.asarray(H.hash_keys(keys, m, seed=3))
+        assert h.min() >= 0 and h.max() < m
+    # determinism + seed sensitivity
+    h1 = np.asarray(H.hash_keys(keys, 64, seed=1))
+    h2 = np.asarray(H.hash_keys(keys, 64, seed=2))
+    assert not np.array_equal(h1, h2)
