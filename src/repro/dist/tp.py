@@ -1,0 +1,157 @@
+"""Tensor-parallel block application.
+
+Two implementations behind one call signature, selected by
+``cfg.tp_impl``:
+
+- ``"gspmd"`` (baseline): run the plain ``models.layers`` block; TP comes
+  from the weight shardings the active rules induce, with GSPMD inserting
+  the collectives.
+- ``"manual"``: Megatron-style shard_map blocks — column-parallel QKV /
+  gate+up, row-parallel output projections, one explicit bf16 psum after
+  attention and one after the MLP.
+
+The manual region is fully manual over EVERY mesh axis (the pinned XLA
+rejects partially-auto regions around the attention loops — see
+``dist/compat.py``): the batch is explicitly split over the (pod, data)
+axes when divisible and replicated otherwise.
+
+The manual path quietly falls back to gspmd whenever it cannot apply (no
+active rules, no ``model`` axis, head counts / d_ff not divisible by the TP
+width, or already inside a manual region that owns the model axis) — CPU
+smoke tests therefore run the exact same numerics as the single-device
+reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import ctx
+from repro.dist.compat import shard_map
+from repro.models import layers as L
+from repro.models import nn
+
+
+def _manual_tp(cfg, rules, *, need_ff: bool) -> int:
+    """TP width when the manual path applies, else 0."""
+    if cfg.tp_impl != "manual" or rules is None:
+        return 0
+    tp = rules.mesh.shape.get("model", 0)
+    if tp <= 1 or "model" in ctx.current_manual_axes():
+        return 0
+    if cfg.n_q % tp or cfg.n_kv % tp:
+        return 0
+    if need_ff and cfg.d_ff % tp:
+        return 0
+    return tp
+
+
+def _dp_axes(mesh, batch: int):
+    """Mesh axes the batch dim is manually split over (empty -> replicated
+    redundant compute on non-model axes, still correct)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return axes if axes and batch % n == 0 else ()
+
+
+def _bcast_spec(arr, batch: int, dp):
+    """Spec for a per-token side input: batch-sharded when its leading dim
+    is the batch, replicated otherwise (e.g. positions [1, S])."""
+    if arr is None:
+        return None
+    if dp and arr.ndim >= 2 and arr.shape[0] == batch:
+        return P(dp, *(None,) * (arr.ndim - 1))
+    return P()
+
+
+def _attn_specs(ap):
+    specs = {"wq": P(None, "model", None), "wk": P(None, "model", None),
+             "wv": P(None, "model", None), "wo": P("model", None, None)}
+    if "bq" in ap:
+        specs.update(bq=P("model", None), bk=P("model", None),
+                     bv=P("model", None))
+    return specs
+
+
+def _attn_manual(cfg, rules, ap, ln, x, positions, window, mrope):
+    """x [B,S,d] -> attention sublayer output (pre-residual), heads
+    column-parallel over ``model``, row-parallel wo + psum."""
+    mesh = rules.mesh
+    B = x.shape[0]
+    dp = _dp_axes(mesh, B)
+    x_spec = P(dp, None, None) if dp else P()
+    mr_spec = (P(None, dp, None) if (mrope is not None and dp
+                                     and mrope.shape[1] == B)
+               else (P() if mrope is not None else None))
+
+    def fn(ap_l, ln_l, x, positions, mrope):
+        xn = nn.rmsnorm(ln_l, x)
+        q, k, v = L.attn_qkv(ap_l, xn)
+        if mrope is not None and cfg.mrope_sections:
+            q = L.apply_mrope(q, mrope, cfg.mrope_sections, cfg.rope_theta)
+            k = L.apply_mrope(k, mrope, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        o = L.flash_attention(q, k, v, causal=True, window=window)
+        y = L.attn_out(ap_l, o)
+        return jax.lax.psum(y, "model")
+
+    mapped = shard_map(
+        fn, mesh=mesh,
+        in_specs=(_attn_specs(ap), {"scale": P()}, x_spec,
+                  _bcast_spec(positions, B, dp), mr_spec),
+        out_specs=x_spec, check_vma=False)
+    return mapped(ap, ln, x, positions, mrope)
+
+
+def _mlp_manual(rules, mp, ln, x):
+    """SwiGLU MLP, d_ff column-parallel, row-parallel wo + psum."""
+    mesh = rules.mesh
+    dp = _dp_axes(mesh, x.shape[0])
+    x_spec = P(dp, None, None) if dp else P()
+
+    def fn(mp_l, ln_l, x):
+        y = L.mlp_apply(mp_l, nn.rmsnorm(ln_l, x))
+        return jax.lax.psum(y, "model")
+
+    mapped = shard_map(
+        fn, mesh=mesh,
+        in_specs=({"wi_gate": P(None, "model"), "wi_up": P(None, "model"),
+                   "wo": P("model", None)}, {"scale": P()}, x_spec),
+        out_specs=x_spec, check_vma=False)
+    return mapped(mp, ln, x)
+
+
+def attn_apply_tp(cfg, p, x, positions, *, window: int = 0,
+                  mrope_positions=None):
+    """Attention sublayer with residual: x + attn(rmsnorm(ln1, x)).
+
+    ``p`` is the full layer param dict (needs "attn" and "ln1"); used by the
+    MoE family whose FFN half is handled by ``models.moe``."""
+    rules = ctx.current_rules()
+    if not _manual_tp(cfg, rules, need_ff=False):
+        h = L.self_attention(p["attn"], nn.rmsnorm(p["ln1"], x), positions,
+                             cfg, window=window,
+                             mrope_positions=mrope_positions)
+        return x + h
+    return x + _attn_manual(cfg, rules, p["attn"], p["ln1"], x, positions,
+                            window, mrope_positions)
+
+
+def block_apply_tp(cfg, p, x, positions, *, window: int = 0,
+                   mrope_positions=None):
+    """Full pre-norm (attn + MLP) block, TP'd per ``cfg.tp_impl``."""
+    rules = ctx.current_rules()
+    if not _manual_tp(cfg, rules, need_ff=True):
+        return L.block_apply(p, x, positions, cfg, window=window,
+                             mrope_positions=mrope_positions)
+    x = x + _attn_manual(cfg, rules, p["attn"], p["ln1"], x, positions,
+                         window, mrope_positions)
+    x = x + _mlp_manual(rules, p["mlp"], p["ln2"], x)
+    return x

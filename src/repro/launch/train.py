@@ -104,6 +104,10 @@ def main():
     t0 = time.time()
     _, losses = runner.run(batch=args.batch, seq_len=args.seq,
                            steps=args.steps, seed=args.seed)
+    if not losses:
+        print(f"[train] checkpoint already at step >= {args.steps}; "
+              f"nothing to do")
+        return 0
     print(f"[train] {args.steps} steps in {time.time()-t0:.1f}s; "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     assert np.isfinite(losses).all(), "NaN/inf loss"

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import ctx
+from repro.dist.compat import shard_map
 from repro.models import nn
 
 def moe_init(key, cfg, dtype):
@@ -127,7 +128,7 @@ def moe_apply(p, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
         C = _capacity(B_l * S, k, E, cfg.moe_capacity_factor)
 
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            shard_map, mesh=mesh,
             in_specs=(P(bspec, None, None), P(), P(), P(), P()),
             out_specs=(P(bspec, None, None), P()),
             check_vma=False)
@@ -162,7 +163,7 @@ def moe_apply(p, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
     psum_axes = ("model",) + (("data",) if f_sharded else ())
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(bspec, None, None), P(),
                   P("model", None, f_spec), P("model", None, f_spec),
                   P("model", f_spec, None)),

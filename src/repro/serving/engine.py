@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import ctx
+from repro.dist.compat import shard_map
 from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import nn
@@ -250,7 +251,7 @@ def paged_attn_op(cfg, rules, x, ap, pool_k_l, pool_v_l, lp_arrays,
                    else None)
     out_scales_spec = (scales_spec if scales_l is not None
                        else (P(), P()))
-    mapped = jax.shard_map(
+    mapped = shard_map(
         fn, mesh=mesh,
         in_specs=(P(), ap_specs, pool_spec, pool_spec, scales_spec,
                   lp_specs, P(), P(),
@@ -277,7 +278,7 @@ def compact_op(rules, slots, n_pages: int, cap: int):
         lp = paged.compact_local(slots, chip, npr, cap)
         return tuple(t[None] for t in lp)
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         fn, mesh=mesh, in_specs=(P(),),
         out_specs=tuple(P(axes_names, None) for _ in range(4)),
         check_vma=False)

@@ -60,9 +60,16 @@ def _path_str(p) -> str:
 
 def save(ckpt_dir: str, step: int, state, state_axes=None,
          extra: Optional[dict] = None) -> str:
-    """Atomic checkpoint of a pytree.  Returns the committed path."""
+    """Atomic checkpoint of a pytree.  Returns the committed path.
+
+    A step that is already committed is left untouched: training is
+    restart-deterministic (batches are a pure function of step), so the
+    state at a given step is content-identical — skipping keeps the commit
+    unconditionally atomic (no rename shuffle with crash windows)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(final):
+        return final
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
@@ -93,7 +100,7 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
     steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
+             if d.startswith("step_") and d.split("_")[1].isdigit()]
     return max(steps) if steps else None
 
 

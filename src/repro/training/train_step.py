@@ -22,6 +22,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.dist import compression
 from repro.dist import ctx
+from repro.dist.compat import axis_size, shard_map
 from repro.models.registry import get_model
 from repro.training import optimizer as opt
 
@@ -94,15 +95,24 @@ def make_train_step_manual_pod(cfg, mesh,
     adamw = adamw or opt.AdamWConfig()
     loss_fn = make_loss_fn(cfg, remat=remat)
 
+    dp_axes = tuple(a for a in ("data",) if a in mesh.shape)
+
     def train_step(state: TrainState, err, batch):
         """``err`` leaves carry a leading [npods] dim (per-pod residuals),
-        sharded over the pod axis.  Only the pod axis is manual
-        (axis_names={'pod'}); data/model sharding inside stays GSPMD."""
-        batch_specs = jax.tree.map(lambda _: P("pod"), batch)
+        sharded over the pod axis.  The region is fully manual (the pinned
+        XLA rejects partially-auto regions around the attention loops — see
+        dist/compat.py): the batch is split over (pod, data), grads are
+        pmean'd over ``data`` uncompressed (cheap ICI), then reduced over
+        ``pod`` through int8 error-feedback compression (the expensive DCN
+        hop).  The model axis sees replicated inputs and computes
+        redundantly — identical on every chip, so the optimizer stays
+        bitwise in sync."""
+        bsp = P(("pod",) + dp_axes)
+        batch_specs = jax.tree.map(lambda _: bsp, batch)
         err_specs = jax.tree.map(lambda _: P("pod"), err)
 
         @functools.partial(
-            jax.shard_map, mesh=mesh, axis_names={"pod"},
+            shard_map, mesh=mesh,
             in_specs=(P(), err_specs, batch_specs),
             out_specs=(P(), err_specs, P(), P()),
             check_vma=False)
@@ -111,11 +121,14 @@ def make_train_step_manual_pod(cfg, mesh,
             with ctx.use_rules(rules):
                 loss, grads = jax.value_and_grad(loss_fn)(state.params,
                                                           batch)
+                if dp_axes:   # within-pod DP mean, uncompressed
+                    grads = jax.tree.map(
+                        lambda g: jax.lax.pmean(g, dp_axes), grads)
                 grads, err2 = compression.tree_compressed_psum(
                     grads, "pod", err_local)
-                npods = jax.lax.axis_size("pod")
+                npods = axis_size("pod")
                 grads = jax.tree.map(lambda g: g / npods, grads)
-                loss = jax.lax.pmean(loss, "pod")
+                loss = jax.lax.pmean(loss, ("pod",) + dp_axes)
                 params2, opt2, metrics = opt.apply(adamw, state.params,
                                                    state.opt, grads)
             err2 = jax.tree.map(lambda e: e[None], err2)

@@ -6,6 +6,12 @@ error: Cannot allocate memory").  Per the dry-run isolation rule, this file
 must NOT set XLA_FLAGS / device counts."""
 import gc
 
+try:                                     # real hypothesis when installed
+    import hypothesis  # noqa: F401
+except ImportError:                      # deterministic fallback (no pip)
+    import _hypothesis_fallback
+    _hypothesis_fallback.install()
+
 import jax
 import pytest
 
