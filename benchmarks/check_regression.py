@@ -1,0 +1,123 @@
+"""Perf-regression gate: compare a fresh ``benchmarks.run --smoke`` result
+(results/benchmarks.json) against the committed baseline
+(benchmarks/baseline.json) and fail when a gated metric drifts beyond the
+tolerance (default ±15%).
+
+Gated metrics are machine-independent by construction: bit counts (space),
+simulator step counts (steps), occupancy / rebuild / abort counts (reuse),
+fast-path coverage and structural VMEM/DMA bytes (kernels), roofline
+fractions.  Wall-clock metrics (``*Mops*``) depend on the runner and are
+reported but never gated — the smoke sizes are far too small for stable
+timing on shared CI.
+
+Usage:
+  python -m benchmarks.check_regression [--baseline benchmarks/baseline.json]
+      [--results results/benchmarks.json] [--tolerance 0.15]
+
+Regenerate the baseline after an intentional perf/behavior change:
+  python -m benchmarks.run --smoke && \
+      cp results/benchmarks.json benchmarks/baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+# report-only: wall-clock throughput (runner-dependent) and fp comparison
+# residuals (BLAS/ISA-dependent; correctness is gated by the pytest suite)
+NOISY_MARKERS = ("Mops", "max_err")
+
+
+def flatten(tree, prefix="", out=None):
+    """dict/list tree -> {path: numeric leaf} (non-numeric leaves skipped)."""
+    if out is None:
+        out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            flatten(v, f"{prefix}/{k}" if prefix else str(k), out)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            flatten(v, f"{prefix}/{i}", out)
+    elif isinstance(tree, bool):
+        out[prefix] = float(tree)
+    elif isinstance(tree, (int, float)):
+        out[prefix] = float(tree)
+    return out
+
+
+def is_noisy(path: str) -> bool:
+    return any(m in path for m in NOISY_MARKERS)
+
+
+def compare(baseline: dict, results: dict, tolerance: float):
+    """Returns (failures, noisy_report, missing, ungated) lists of strings.
+    ``ungated``: metrics present in results but not in the baseline — not a
+    failure, but surfaced so new benches don't silently escape the gate."""
+    base = flatten(baseline)
+    new = flatten(results)
+    failures, noisy, missing = [], [], []
+    ungated = sorted(set(new) - set(base))
+    for path, b in sorted(base.items()):
+        if path not in new:
+            missing.append(path)
+            continue
+        n = new[path]
+        if not (math.isfinite(b) and math.isfinite(n)):
+            if math.isnan(b) and math.isnan(n):
+                continue
+            failures.append(f"{path}: baseline={b} now={n} (non-finite)")
+            continue
+        denom = max(abs(b), 1e-12)
+        rel = abs(n - b) / denom
+        line = f"{path}: baseline={b:.6g} now={n:.6g} drift={rel * 100:.1f}%"
+        if is_noisy(path):
+            noisy.append(line)
+        elif rel > tolerance:
+            failures.append(line)
+    return failures, noisy, missing, ungated
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--results", default="results/benchmarks.json")
+    ap.add_argument("--tolerance", type=float, default=0.15)
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.results) as f:
+        results = json.load(f)
+
+    failures, noisy, missing, ungated = compare(baseline, results,
+                                                args.tolerance)
+    n_gated = len(flatten(baseline)) - len(noisy) - len(missing)
+    print(f"check_regression: {n_gated} gated metrics vs {args.baseline} "
+          f"(tolerance ±{args.tolerance * 100:.0f}%)")
+    if ungated:
+        print(f"\n{len(ungated)} NEW metrics not in the baseline (ungated — "
+              "regenerate benchmarks/baseline.json to gate them):")
+        for path in ungated:
+            print("  ", path)
+    if noisy:
+        print(f"\n{len(noisy)} wall-clock metrics (report-only):")
+        for line in noisy:
+            print("  ", line)
+    if missing:
+        print(f"\n{len(missing)} baseline metrics missing from results "
+              "(did a bench get dropped? regenerate the baseline):")
+        for line in missing:
+            print("  ", line)
+    if failures:
+        print(f"\nFAIL — {len(failures)} metrics drifted beyond tolerance:")
+        for line in failures:
+            print("  ", line)
+    ok = not failures and not missing
+    print("\ncheck_regression:", "OK" if ok else "FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

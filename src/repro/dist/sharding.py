@@ -16,6 +16,11 @@ Three presets:
 - ``serve_rules``  — decode activations replicated (KB-scale), weights TP
   over ``model``, page pools sharded over every mesh axis, per-sequence
   state (ring buffers, SSM state) over ``data``.
+- ``serve_manual_rules`` — the fused manual-TP decode layout (``tp_impl=
+  "manual"``, see ``serving/engine.py``): page pools sharded over the page
+  dim on (pod, data) only and over KV *heads* on ``model``, so the one
+  fully-manual decode region keeps heads resident per chip and never
+  gathers K/V across the model axis.
 - ``dp_rules``     — pure data parallel: batch over (pod, data); experts
   unmapped (MoE falls back to its no-dispatch DP path); weights FSDP over
   ``model`` since TP is unused.
@@ -154,6 +159,19 @@ def serve_rules(mesh) -> ShardingRules:
     rules: Rules = {
         "batch": ("data",),
         "pages": ("pod", "data", "model"),
+        **_TP_WEIGHTS,
+    }
+    return ShardingRules(mesh=mesh, rules=rules, mode="serve")
+
+
+def serve_manual_rules(mesh) -> ShardingRules:
+    """Fused manual-TP decode: pages over (pod, data) ONLY — the model axis
+    shards KV *heads* instead (``"kv"`` rule), matching the in_specs of the
+    single manual shard_map region in ``serving/engine.py``.  Weights stay
+    Megatron-TP over model; activations replicated."""
+    rules: Rules = {
+        "batch": ("data",),
+        "pages": ("pod", "data"),
         **_TP_WEIGHTS,
     }
     return ShardingRules(mesh=mesh, rules=rules, mode="serve")

@@ -20,6 +20,14 @@ active rules, no ``model`` axis, head counts / d_ff not divisible by the TP
 width, or already inside a manual region that owns the model axis) — CPU
 smoke tests therefore run the exact same numerics as the single-device
 reference.
+
+Decode side (the fused manual serve step in ``serving/engine.py``): this
+module owns the gate (``decode_manual_tp``), the shard_map in_specs for the
+stacked decode params (``decode_param_specs``), and the per-chip manual
+projections that run INSIDE the engine's single manual region
+(``mlp_decode_manual``, ``logits_decode_manual``).  Unlike the train gate, a
+1-wide model axis still takes the fused path — head "shards" are then the
+full head set, which gives the region single-process CPU test coverage.
 """
 from __future__ import annotations
 
@@ -126,6 +134,74 @@ def _mlp_manual(rules, mp, ln, x):
                    "wo": P("model", None)}, {"scale": P()}, x_spec),
         out_specs=x_spec, check_vma=False)
     return mapped(mp, ln, x)
+
+
+# ---------------------------------------------------------------------------
+# Decode-side manual TP (used by serving/engine's fused serve step).
+
+def decode_manual_tp(cfg, rules) -> int:
+    """TP width for the fused manual decode region, 0 when inapplicable.
+
+    Requirements: ``tp_impl="manual"``, an active rule set with a ``model``
+    mesh axis not already manual, and head / FFN (or expert) counts divisible
+    by the TP width.  tp == 1 is deliberately allowed (see module doc)."""
+    if cfg.tp_impl != "manual" or rules is None:
+        return 0
+    tp = rules.mesh.shape.get("model", 0)
+    if tp < 1 or "model" in ctx.current_manual_axes():
+        return 0
+    if cfg.n_q % tp or cfg.n_kv % tp:
+        return 0
+    if cfg.family == "moe":
+        if cfg.num_experts % tp:
+            return 0
+    elif cfg.d_ff % tp:
+        return 0
+    return tp
+
+
+def decode_param_specs(cfg, params, *, vocab_sharded: bool):
+    """shard_map in_specs (prefix pytree) for the fused manual decode region:
+    stacked layer weights column/row-parallel over ``model`` (leading dim is
+    the layer scan), everything else replicated.  ``vocab_sharded`` shards
+    the untied lm_head over the vocab dim (logits all_gathered after)."""
+    h = P(None, None, "model", None)                 # [L, d, H, hd]
+    attn = {"wq": h, "wk": h, "wv": h,
+            "wo": P(None, "model", None, None)}      # [L, H, hd, d]
+    if "bq" in params["layers"]["attn"]:
+        b = P(None, "model", None)
+        attn.update(bq=b, bk=b, bv=b)
+    layer = {"attn": attn, "ln1": P(), "ln2": P()}
+    if cfg.family == "moe":
+        e = P(None, "model", None, None)             # [L, E, d|f, f|d]
+        layer["moe"] = {"router": P(), "wi_gate": e, "wi_up": e, "wo": e}
+    else:
+        layer["mlp"] = {"wi_gate": P(None, None, "model"),
+                        "wi_up": P(None, None, "model"),
+                        "wo": P(None, "model", None)}
+    specs = {k: P() for k in params}
+    specs["layers"] = layer
+    if vocab_sharded and "lm_head" in params:
+        specs["lm_head"] = {"w": P(None, "model")}
+    return specs
+
+
+def mlp_decode_manual(mp, x):
+    """SwiGLU MLP on a d_ff column shard + row-parallel wo; runs INSIDE an
+    enclosing manual region that owns the model axis.  x [B, S, d]."""
+    return jax.lax.psum(L.mlp_apply(mp, x), "model")
+
+
+def logits_decode_manual(cfg, params, x, *, vocab_sharded: bool):
+    """Read-out inside the manual region.  Tied embeddings stay replicated
+    (the same table serves the lookup); an untied head is vocab-sharded over
+    ``model`` with a tiled all_gather when the width divides."""
+    if cfg.tie_embeddings:
+        return nn.embed_logits(params["embed"], x)
+    y = nn.dense(params["lm_head"], x)
+    if vocab_sharded:
+        y = jax.lax.all_gather(y, "model", axis=-1, tiled=True)
+    return y
 
 
 def attn_apply_tp(cfg, p, x, positions, *, window: int = 0,

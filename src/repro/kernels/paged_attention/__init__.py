@@ -1,2 +1,2 @@
-from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ops import paged_attention, shard_heads
 from repro.kernels.paged_attention.ref import paged_attention_ref

@@ -21,3 +21,23 @@ def paged_attention(q, k_pages, v_pages, page_ids, lens, *,
         return paged_attention_kernel(q, k_pages, v_pages, page_ids, lens,
                                       interpret=interpret)
     return paged_attention_ref(q, k_pages, v_pages, page_ids, lens)
+
+
+def shard_heads(q, k_pages, v_pages, shard: int, n_shards: int):
+    """Slice (q, k_pages, v_pages) to TP shard ``shard`` of ``n_shards``
+    along the head dims — the per-shard view the fused manual decode region
+    (serving/engine, ``tp_impl="manual"``) feeds this kernel per chip.
+
+    GQA grouping is contiguous (q head h reads kv head h // G), so slicing
+    both head dims by equal contiguous blocks keeps every query's kv head
+    local to its shard: kernel(shard s) == kernel(full)[:, s·QH/n : (s+1)·
+    QH/n] exactly.  Requires QH and KH divisible by ``n_shards``."""
+    QH = q.shape[1]
+    KH = k_pages.shape[2]
+    if QH % n_shards or KH % n_shards:
+        raise ValueError(f"heads not divisible: QH={QH} KH={KH} "
+                         f"n_shards={n_shards}")
+    qh, kh = QH // n_shards, KH // n_shards
+    return (q[:, shard * qh:(shard + 1) * qh],
+            k_pages[:, :, shard * kh:(shard + 1) * kh],
+            v_pages[:, :, shard * kh:(shard + 1) * kh])

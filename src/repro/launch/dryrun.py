@@ -121,7 +121,13 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
         lowered = jitted.lower(params_sds, specs)
 
     else:  # decode
-        rules = SH.serve_rules(mesh)
+        # tp_impl=manual uses the fused-decode layout (pages over pod/data,
+        # KV heads over model) — but only when the fused region actually
+        # applies; otherwise keep the baseline pages-over-every-axis layout
+        # (the engine falls back to the gspmd step anyway).
+        man_rules = SH.serve_manual_rules(mesh)
+        rules = (man_rules if EG._manual_decode_ok(cfg, man_rules)
+                 else SH.serve_rules(mesh))
         params_sds, axes = _abstract(lambda k: model.init(cfg, k), key)
         params_sh = _shardings(rules, axes, params_sds)
         B = shape.global_batch

@@ -322,6 +322,24 @@ def attn_out(p, o):
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
 
 
+def attn_qkv_decode(p, x):
+    """Single-token QKV: x [B, d] -> q/k/v [B, H, hd].  Works on the full
+    weights or on a TP head shard (the heads dim pre-sliced by shard_map —
+    the decode-mode manual projection of dist/tp.py)."""
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x, p["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def attn_out_decode(p, o):
+    """Single-token out projection: o [B, H, hd] -> [B, d].  On a TP head
+    shard this is the row-parallel half — the caller psums over ``model``."""
+    return jnp.einsum("bhk,hkd->bd", o, p["wo"])
+
+
 def self_attention(p, x, positions, cfg, *, window: int = 0,
                    mrope_positions=None, causal: bool = True):
     """Full-sequence self attention (train / prefill)."""

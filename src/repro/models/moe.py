@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import ctx
-from repro.dist.compat import shard_map
+from repro.dist.compat import axis_size, shard_map
 from repro.models import nn
 
 def moe_init(key, cfg, dtype):
@@ -181,6 +181,25 @@ def moe_apply(p, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return y.reshape(Bl, S, d), aux
 
     return _sharded(x, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
+
+
+def moe_decode_local(p, x, cfg) -> jnp.ndarray:
+    """Per-chip MoE for the fused manual decode region (serving/engine.py):
+    tokens replicated over every axis, experts sharded over ``model``
+    (weights pre-sliced by the enclosing shard_map's in_specs), combine via
+    one psum — the decode-mode manual projection.  Must run INSIDE a manual
+    region that owns the model axis; x [B, S, d] -> y [B, S, d].  The aux
+    load-balance loss is dropped (decode never trains the router)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    tp = axis_size("model")
+    E_local = E // tp
+    e_off = jax.lax.axis_index("model") * E_local
+    C = _capacity(B * S, k, E, cfg.moe_capacity_factor)
+    y, _ = _moe_local(x.reshape(B * S, d), p["router"], p["wi_gate"],
+                      p["wi_up"], p["wo"], k=k, E=E, E_local=E_local,
+                      e_offset=e_off, C=C)
+    return jax.lax.psum(y.reshape(B, S, d), "model")
 
 
 def moe_flops_per_token(cfg) -> int:

@@ -6,10 +6,22 @@ The hash-table page table (serving/page_table) is consulted ONCE per step
 compacted page list — the paper's lookup is on the critical path exactly
 once per token, as in a production block-table.
 
-Sharding (SERVE_RULES): activations replicated (decode activations are
-KB-scale), weights TP-sharded over ``model``, page pools sharded over every
-mesh axis, SSM/ring state sharded over batch.  The paged attention op is a
-fully-manual shard_map; everything else is GSPMD.
+Sharding, gspmd baseline (``serve_rules``): activations replicated (decode
+activations are KB-scale), weights TP-sharded over ``model``, page pools
+sharded over every mesh axis, SSM/ring state sharded over batch.  The paged
+attention op is a fully-manual shard_map; everything else is GSPMD.
+
+``tp_impl="manual"`` (``serve_manual_rules``): ONE fully-manual shard_map
+over every mesh axis covers the whole step — embed, the once-per-step
+page-table alloc + wait-free lookup + per-chip compaction, every layer's
+attention/MLP/MoE, and the read-out.  Layout: KV pools page-sharded over
+(pod, data) and *head*-sharded over ``model`` (each chip attends its own
+heads end-to-end — no cross-model K/V gather), page-table metadata
+replicated (every chip runs the identical lookup), weights Megatron
+column/row-parallel with one psum after attention and one after the
+MLP/MoE.  Families without a paged dense stack (ssm / hybrid / encdec /
+local-window gemma3) and non-divisible head counts fall back to the gspmd
+path (dist/tp.decode_manual_tp).
 """
 from __future__ import annotations
 
@@ -22,6 +34,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import ctx
+from repro.dist import tp as TP
 from repro.dist.compat import shard_map
 from repro.models import layers as L
 from repro.models import moe as MOE
@@ -57,6 +70,20 @@ def _chip_idx(axes, mesh):
     for a in axes:
         idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
     return idx
+
+
+def _pd_axes(rules):
+    """Mesh axes the page dim shards over in the fused manual decode layout
+    (everything but ``model``, which shards KV heads instead)."""
+    return tuple(a for a in ("pod", "data") if a in rules.mesh.shape)
+
+
+def _manual_decode_ok(cfg, rules) -> bool:
+    """The fused manual-TP decode region applies: paged dense stack
+    (dense/moe/vlm, no local-window pattern) and divisible head / ff /
+    expert counts (dist/tp.decode_manual_tp)."""
+    return (cfg.family in ("dense", "moe", "vlm") and not cfg.pattern_local
+            and TP.decode_manual_tp(cfg, rules) > 0)
 
 
 # ---------------------------------------------------------------------------
@@ -127,14 +154,16 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
         return state
 
     axes: Dict[str, Any] = {"pos": (None,), "seq_ids": (None,)}
+    manual_tp = rules is not None and _manual_decode_ok(cfg, rules)
     if n_paged:
         axes["table"] = BT.HashTable(table=(None,), num_keys=(),
                                      num_tombs=(), seed=())
-        axes["pools"] = paged.PagedPools(k=paged.POOL_AXES,
-                                         v=paged.POOL_AXES)
+        pool_ax = paged.POOL_AXES_TP if manual_tp else paged.POOL_AXES
+        axes["pools"] = paged.PagedPools(k=pool_ax, v=pool_ax)
         if cfg.kv_cache_dtype == "int8":
-            axes["pool_scales"] = paged.PoolScales(
-                k=paged.POOL_SCALE_AXES, v=paged.POOL_SCALE_AXES)
+            sc_ax = (paged.POOL_SCALE_AXES_TP if manual_tp
+                     else paged.POOL_SCALE_AXES)
+            axes["pool_scales"] = paged.PoolScales(k=sc_ax, v=sc_ax)
     if n_ring:
         axes["ring_k"] = ("layer", "batch", None, "kv", None)
         axes["ring_v"] = ("layer", "batch", None, "kv", None)
@@ -176,11 +205,7 @@ def _paged_attn_chip(cfg, x, ap, pool_k_l, pool_v_l, scales_l, lp_tree,
     chip = _chip_idx(axes_names, mesh) if axes_names else jnp.int32(0)
     lp = paged.LocalPages(*(t[0] for t in lp_tree))
 
-    q = jnp.einsum("bd,dhk->bhk", x[:, 0], ap["wq"])
-    k = jnp.einsum("bd,dhk->bhk", x[:, 0], ap["wk"])
-    v = jnp.einsum("bd,dhk->bhk", x[:, 0], ap["wv"])
-    if "bq" in ap:
-        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q, k, v = L.attn_qkv_decode(ap, x[:, 0])
     if axes_names and q_sharded:
         q = jax.lax.all_gather(q, "model", axis=1, tiled=True)
     if axes_names and kv_sharded:
@@ -204,10 +229,9 @@ def _paged_attn_chip(cfg, x, ap, pool_k_l, pool_v_l, scales_l, lp_tree,
         hl = cfg.n_q // mesh.shape["model"]
         my = jax.lax.dynamic_slice_in_dim(
             out, jax.lax.axis_index("model") * hl, hl, axis=1)
-        y = jnp.einsum("bhk,hkd->bd", my, ap["wo"])
-        y = jax.lax.psum(y, "model")
+        y = jax.lax.psum(L.attn_out_decode(ap, my), "model")
     else:
-        y = jnp.einsum("bhk,hkd->bd", out, ap["wo"])
+        y = L.attn_out_decode(ap, out)
     if scales_l is None:
         scales_l = (jnp.zeros((), jnp.bfloat16),) * 2   # dummy pytree
     return y[:, None], pool_k_l, pool_v_l, scales_l
@@ -292,11 +316,7 @@ def _ring_attn(cfg, x, ap, ring_k_l, ring_v_l, ring_pos, positions):
     """x [B,1,d]; ring [B,W,kv,hd]; ring_pos [B,W] absolute positions."""
     B = x.shape[0]
     W = ring_k_l.shape[1]
-    q = jnp.einsum("bd,dhk->bhk", x[:, 0], ap["wq"])
-    k = jnp.einsum("bd,dhk->bhk", x[:, 0], ap["wk"])
-    v = jnp.einsum("bd,dhk->bhk", x[:, 0], ap["wv"])
-    if "bq" in ap:
-        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q, k, v = L.attn_qkv_decode(ap, x[:, 0])
     q = _rope_single(cfg, q, positions)
     k = _rope_single(cfg, k, positions)
     slot = positions % W
@@ -314,8 +334,7 @@ def _ring_attn(cfg, x, ap, ring_k_l, ring_v_l, ring_pos, positions):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgw,bwkd->bkgd", p, ring_v_l.astype(jnp.float32))
     o = o.reshape(B, cfg.n_q, cfg.hd).astype(x.dtype)
-    y = jnp.einsum("bhk,hkd->bd", o, ap["wo"])
-    return y[:, None], ring_k_l, ring_v_l
+    return L.attn_out_decode(ap, o)[:, None], ring_k_l, ring_v_l
 
 
 # ---------------------------------------------------------------------------
@@ -334,7 +353,7 @@ def _cross_attn_decode(cfg, x, cp, ck, cv):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p, cv.astype(jnp.float32))
     o = o.reshape(B, cfg.n_q, cfg.hd).astype(x.dtype)
-    return jnp.einsum("bhk,hkd->bd", o, cp["wo"])[:, None]
+    return L.attn_out_decode(cp, o)[:, None]
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +363,9 @@ def make_serve_step(cfg, *, S_max: int, rules=None,
                     page_size: int = DEFAULT_PAGE_SIZE):
     """Returns serve_step(params, state, tokens [B,1], positions [B],
     [mrope_positions]) -> (logits [B,V], state')."""
+    if rules is not None and _manual_decode_ok(cfg, rules):
+        return _make_manual_serve_step(cfg, S_max=S_max, rules=rules,
+                                       page_size=page_size)
     n_chips = _n_chips(rules)
     family = cfg.family
 
@@ -353,6 +375,118 @@ def make_serve_step(cfg, *, S_max: int, rules=None,
                                     mrope_positions, rules=rules,
                                     S_max=S_max, page_size=page_size,
                                     n_chips=n_chips)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Fused manual-TP decode (tp_impl="manual"): the whole step in ONE manual
+# shard_map region over every mesh axis.
+
+def _paged_attn_shard(cfg, x, ap, pk, pv, scales, lp, write_slot, positions,
+                      mrope, *, chip_pd, npr, page_size, pd_axes):
+    """One attention sublayer inside the fused manual region, local head
+    shard end-to-end: column-parallel QKV, KV write into the chip's own
+    pages, per-chip paged attention over local (page, head) slices, lse
+    merge across the page axes only, row-parallel out + one psum."""
+    B = x.shape[0]
+    q, k, v = L.attn_qkv_decode(ap, x[:, 0])       # local head shard
+    q = _rope_single(cfg, q, positions, mrope)
+    k = _rope_single(cfg, k, positions, mrope)
+    pk, pv, scales = paged.write_token_kv(pk, pv, k, v, write_slot,
+                                          positions, chip_pd, npr,
+                                          page_size, scales=scales)
+    kv_l = k.shape[1]                              # n_kv / tp
+    G = cfg.n_q // cfg.n_kv
+    qg = q.reshape(B, kv_l, G, cfg.hd)             # grouping is head-local
+    o, m, l = paged.attend_local(qg, pk, pv, lp, positions, page_size,
+                                 scales=scales)
+    out = paged.merge_global(o, m, l, pd_axes)     # heads never cross chips
+    out = out.reshape(B, kv_l * G, cfg.hd).astype(x.dtype)
+    y = jax.lax.psum(L.attn_out_decode(ap, out), "model")
+    if scales is None:
+        scales = (jnp.zeros((), jnp.bfloat16),) * 2   # dummy pytree
+    return y[:, None], pk, pv, scales
+
+
+def _make_manual_serve_step(cfg, *, S_max: int, rules,
+                            page_size: int = DEFAULT_PAGE_SIZE):
+    """Decode step for ``tp_impl="manual"``: page-table alloc + wait-free
+    lookup + compaction + all layers + read-out fused into a single manual
+    shard_map (see module docstring for the layout)."""
+    mesh = rules.mesh
+    pd_axes = _pd_axes(rules)
+    n_pd = 1
+    for a in pd_axes:
+        n_pd *= mesh.shape[a]
+    tp = mesh.shape["model"]
+    maxP = -(-S_max // page_size)
+    vocab_sharded = (not cfg.tie_embeddings) and cfg.vocab_size % tp == 0
+
+    def serve_step(params, state, tokens, positions, mrope_positions=None):
+        B = tokens.shape[0]
+        n_pages = state["pools"].k.shape[1]
+        npr = n_pages // n_pd
+        cap = paged.capacity(B, maxP, n_pd,
+                             factor=cfg.page_capacity_factor)
+
+        pool_spec = P(None, pd_axes or None, None, "model", None)
+        state_specs: Dict[str, Any] = {k: P() for k in state}
+        state_specs["pools"] = paged.PagedPools(k=pool_spec, v=pool_spec)
+        if "pool_scales" in state:
+            sc = P(None, pd_axes or None, None, "model")
+            state_specs["pool_scales"] = paged.PoolScales(k=sc, v=sc)
+        param_specs = TP.decode_param_specs(cfg, params,
+                                            vocab_sharded=vocab_sharded)
+        mr_spec = P() if mrope_positions is not None else None
+
+        def body(params, state, tokens, positions, mrope):
+            x = nn.embed_lookup(params["embed"], tokens)      # replicated
+            new_state = dict(state)
+            chip_pd = _chip_idx(pd_axes, mesh)
+            # the paper's lookup, once per step, identical on every chip
+            table, write_slot = PT.alloc_step(state["table"],
+                                              state["seq_ids"], positions,
+                                              page_size=page_size)
+            slots = PT.lookup_pages(table, state["seq_ids"], positions,
+                                    page_size=page_size, max_pages=maxP)
+            lp = paged.compact_local(slots, chip_pd, npr, cap)
+            new_state["table"] = table
+            sk, sv = _scale_xs(cfg, state, cfg.num_layers)
+
+            def layer(x, xs):
+                lpar, pk, pv, sk_l, sv_l = xs
+                h, pk, pv, sc = _paged_attn_shard(
+                    cfg, nn.rmsnorm(lpar["ln1"], x), lpar["attn"], pk, pv,
+                    _scales_in(cfg, sk_l, sv_l), lp, write_slot, positions,
+                    mrope, chip_pd=chip_pd, npr=npr, page_size=page_size,
+                    pd_axes=pd_axes)
+                x = x + h
+                xn = nn.rmsnorm(lpar["ln2"], x)
+                if cfg.family == "moe":
+                    y = MOE.moe_decode_local(lpar["moe"], xn, cfg)
+                else:
+                    y = TP.mlp_decode_manual(lpar["mlp"], xn)
+                return x + y, (pk, pv) + tuple(sc)
+
+            x_out, (pk, pv, sk2, sv2) = jax.lax.scan(
+                layer, x, (params["layers"], state["pools"].k,
+                           state["pools"].v, sk, sv),
+                unroll=cfg.scan_unroll)
+            new_state["pools"] = paged.PagedPools(k=pk, v=pv)
+            if cfg.kv_cache_dtype == "int8":
+                new_state["pool_scales"] = paged.PoolScales(k=sk2, v=sv2)
+            x_out = nn.rmsnorm(params["final_norm"], x_out)
+            logits = TP.logits_decode_manual(cfg, params, x_out,
+                                             vocab_sharded=vocab_sharded)
+            new_state["pos"] = positions + 1
+            return logits[:, 0].astype(jnp.float32), new_state
+
+        mapped = shard_map(
+            body, mesh=mesh,
+            in_specs=(param_specs, state_specs, P(), P(), mr_spec),
+            out_specs=(P(), state_specs), check_vma=False)
+        return mapped(params, state, tokens, positions, mrope_positions)
 
     return serve_step
 

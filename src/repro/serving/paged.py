@@ -68,6 +68,13 @@ def quantize_kv(x):
 POOL_AXES = ("layer", "pages", None, None, None)
 POOL_SCALE_AXES = ("layer", "pages", None, None)
 
+# Fused manual-TP decode layout (serve_manual_rules): pages over (pod, data)
+# only, KV *heads* over model — each model-axis chip keeps its head slice of
+# every page it owns, so attention runs end-to-end on local heads with no
+# cross-model K/V gather (serving/engine._make_manual_serve_step).
+POOL_AXES_TP = ("layer", "pages", None, "kv", None)
+POOL_SCALE_AXES_TP = ("layer", "pages", None, "kv")
+
 
 class LocalPages(NamedTuple):
     """Per-chip compacted page list (precomputed once per serve step)."""

@@ -17,8 +17,8 @@ from repro.dist import compression as COMP
 from repro.dist import ctx
 from repro.dist import pipeline as PL
 from repro.dist import tp as TP
-from repro.dist.sharding import ShardingRules, dp_rules, serve_rules, \
-    train_rules
+from repro.dist.sharding import ShardingRules, dp_rules, serve_manual_rules, \
+    serve_rules, train_rules
 from repro.models import layers as L
 
 
@@ -160,6 +160,50 @@ def test_attn_apply_tp_matches_layers():
                                positions, cfg)
     got = TP.attn_apply_tp(cfg, p, x, positions)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Decode-side manual TP: gate + layout rules.
+
+def test_decode_manual_tp_gate():
+    """decode_manual_tp: tp_impl/mesh/divisibility gating, tp==1 allowed,
+    refusal inside an enclosing manual region (serving/engine keys the fused
+    decode region off this)."""
+    mesh42 = jax.sharding.AbstractMesh((("data", 4), ("model", 2)))
+    mesh24 = jax.sharding.AbstractMesh((("data", 2), ("model", 4)))
+    dense = get_smoke_config("qwen2.5-32b")          # n_q=8, n_kv=2
+    man = dataclasses.replace(dense, tp_impl="manual")
+    assert TP.decode_manual_tp(dense, serve_manual_rules(mesh42)) == 0
+    assert TP.decode_manual_tp(man, None) == 0
+    assert TP.decode_manual_tp(man, serve_manual_rules(mesh42)) == 2
+    assert TP.decode_manual_tp(man, serve_manual_rules(mesh24)) == 0  # kv 2%4
+    assert TP.decode_manual_tp(
+        dataclasses.replace(man, d_ff=191), serve_manual_rules(mesh42)) == 0
+    # tp == 1 still takes the fused path (single-device CPU coverage)
+    assert TP.decode_manual_tp(man, serve_manual_rules(_mesh_1x1())) == 1
+    # MoE gates on expert divisibility instead of d_ff
+    moe = dataclasses.replace(get_smoke_config("granite-moe-1b-a400m"),
+                              tp_impl="manual")
+    assert TP.decode_manual_tp(moe, serve_manual_rules(mesh42)) == 2
+    assert TP.decode_manual_tp(
+        dataclasses.replace(moe, num_experts=3),
+        serve_manual_rules(mesh42)) == 0
+    # inside a region that already owns the model axis: refuse
+    with ctx.manual_axes({"model"}):
+        assert TP.decode_manual_tp(man, serve_manual_rules(mesh42)) == 0
+
+
+def test_serve_manual_rules_pool_layout():
+    """The fused-decode layout: pages over (pod, data) only, KV heads over
+    model — serve_manual_rules + POOL_AXES_TP must resolve to exactly that."""
+    from repro.serving import paged
+    mesh = jax.sharding.AbstractMesh((("data", 2), ("model", 4)))
+    r = serve_manual_rules(mesh)
+    spec = r.spec(paged.POOL_AXES_TP, (2, 8, 4, 8, 16))
+    assert spec == P(None, "data", None, "model")
+    # baseline serve rules keep pages over every axis and heads unsharded
+    spec0 = serve_rules(mesh).spec(paged.POOL_AXES, (2, 8, 4, 8, 16))
+    assert spec0 == P(None, ("data", "model"))
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,12 @@
-"""Paged-attention kernel vs oracle (interpret mode), shape/dtype sweeps."""
+"""Paged-attention kernel vs oracle (interpret mode), shape/dtype sweeps,
+and TP head-shard slicing (the fused manual decode layout)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.paged_attention import paged_attention, paged_attention_ref
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_ref, shard_heads)
 
 
 def make_case(rng, B, QH, KH, D, NP, PS, MP, dtype):
@@ -51,6 +53,31 @@ def test_single_token_and_page_boundary():
         out_k = paged_attention(q, k, v, ids, lens, interpret=True)
         np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_ref),
                                    rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_head_shard_slices_match_full(n_shards):
+    """Per-TP-shard kernel launches over head slices concatenate to the full
+    kernel output exactly — the invariant the fused manual decode region
+    relies on (heads never cross chips, no cross-shard combine needed)."""
+    rng = np.random.default_rng(7)
+    B, QH, KH, D, NP, PS, MP = 2, 8, 4, 32, 16, 8, 4
+    q, k, v, ids, lens = make_case(rng, B, QH, KH, D, NP, PS, MP,
+                                   jnp.float32)
+    full = np.asarray(paged_attention(q, k, v, ids, lens, interpret=True))
+    parts = []
+    for s in range(n_shards):
+        qs, ks, vs = shard_heads(q, k, v, s, n_shards)
+        parts.append(np.asarray(
+            paged_attention(qs, ks, vs, ids, lens, interpret=True)))
+    np.testing.assert_array_equal(np.concatenate(parts, axis=1), full)
+
+
+def test_head_shard_rejects_indivisible():
+    rng = np.random.default_rng(8)
+    q, k, v, _, _ = make_case(rng, 1, 6, 2, 16, 8, 4, 2, jnp.float32)
+    with pytest.raises(ValueError):
+        shard_heads(q, k, v, 0, 4)
 
 
 def test_shared_pages_prefix_cache():

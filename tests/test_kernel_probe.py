@@ -64,6 +64,37 @@ def test_small_batches_and_padding():
         np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_ref))
 
 
+def test_unresolved_runs_fall_back_to_oracle():
+    """Adversarial load: a single giant probe run (every key hashed into one
+    narrow band) extends far past the kernel's two-block resident window, so
+    keys deep in the run can see neither their cell nor an EMPTY — they must
+    be reported unresolved and served by the jnp oracle with identical
+    results (present AND absent queries)."""
+    m, TB = 512, 256
+    ht = BT.create(m, seed=5)
+    rng = np.random.default_rng(12)
+    cand = rng.choice(1 << 27, size=1 << 17, replace=False).astype(np.uint32)
+    hv = np.asarray(BT._hash(ht, jnp.asarray(cand)))
+    band = cand[hv < 64]
+    assert len(band) >= 428, len(band)
+    clustered = band[:300]          # run spans ~300 cells from slot < 64
+    ht, ret = BT.insert_batch(ht, jnp.asarray(clustered))
+    assert not np.any(np.asarray(ret) == 2)
+
+    absent = band[300:428]          # same band, never inserted
+    qk = jnp.asarray(np.concatenate([clustered, absent]))
+    frac = float(resolved_fraction(ht, qk, TB=TB, interpret=True))
+    assert frac < 1.0, "run never left the resident window — not adversarial"
+    assert frac > 0.0, "even run heads unresolved — kernel fast path broken"
+
+    f_k, s_k = probe_lookup(ht, qk, TB=TB, interpret=True)
+    f_ref, s_ref = BT.find_batch(ht, qk)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_ref))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_ref))
+    assert np.asarray(f_k)[:300].all()          # every inserted key found
+    assert not np.asarray(f_k)[300:].any()      # absent stay absent
+
+
 def test_fast_path_coverage():
     """At moderate load the kernel should resolve nearly all keys itself."""
     m = 8192

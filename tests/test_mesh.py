@@ -185,6 +185,65 @@ print("manual TP == baseline OK")
 """)
 
 
+def test_manual_decode_matches_gspmd():
+    """The fused manual-TP decode step (one shard_map over all axes,
+    head-sharded KV pools) matches the GSPMD decode path token-for-token on
+    an 8-device mesh — dense (pod/data/model), MoE (expert-parallel), and
+    int8-KV variants."""
+    run_with_devices(COMMON + """
+import dataclasses
+from repro.configs import get_smoke_config
+from repro.dist.sharding import serve_rules, serve_manual_rules
+from repro.models.registry import get_model
+from repro.serving import engine as EG
+
+CASES = [
+    ("qwen2.5-32b", (2, 2, 2), ("pod", "data", "model"), {}),
+    ("granite-moe-1b-a400m", (4, 2), ("data", "model"), {}),
+    ("qwen2.5-32b", (4, 2), ("data", "model"), {"kv_cache_dtype": "int8"}),
+]
+for arch, shape, axes, over in CASES:
+    cfg = dataclasses.replace(get_smoke_config(arch), **over)
+    mesh = jax.make_mesh(shape, axes)
+    model = get_model(cfg)
+    params, _ = model.init(cfg, jax.random.PRNGKey(0))
+    B, T = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+
+    def run(c, r):
+        state, _ = EG.make_decode_state(c, B, S_max=32, page_size=4, rules=r)
+        step = jax.jit(EG.make_serve_step(c, S_max=32, page_size=4, rules=r))
+        outs = []
+        for t in range(T):
+            pos = jnp.full((B,), t, jnp.int32)
+            lg, state = step(params, state, toks[:, t:t+1], pos)
+            outs.append(np.asarray(lg))
+        return np.stack(outs)
+
+    man_cfg = dataclasses.replace(cfg, tp_impl="manual")
+    man_rules = serve_manual_rules(mesh)
+    assert EG._manual_decode_ok(man_cfg, man_rules), (arch, "gate refused")
+    gspmd = run(cfg, serve_rules(mesh))
+    manual = run(man_cfg, man_rules)
+    np.testing.assert_allclose(manual, gspmd, atol=6e-2, rtol=1e-2,
+                               err_msg=arch)
+    # greedy tokens agree everywhere the top-2 gap exceeds fp noise
+    am, ag = manual.argmax(-1), gspmd.argmax(-1)
+    mism = am != ag
+    if mism.any():
+        srt = np.sort(gspmd, axis=-1)
+        gap = srt[..., -1] - srt[..., -2]
+        assert (gap[mism] < 0.12).all(), (arch, gap[mism].max())
+    if cfg.family == "dense" and not over:
+        ref = run(cfg, None)
+        np.testing.assert_allclose(manual, ref, atol=6e-2, rtol=1e-2)
+    print(arch, over, "manual == gspmd OK, maxerr",
+          float(np.abs(manual - gspmd).max()))
+print("fused manual decode == gspmd OK")
+""")
+
+
 def test_sharded_dht_roundtrip():
     run_with_devices(COMMON + """
 from repro.core import sharded as SHT

@@ -1,6 +1,8 @@
 """Serving tests: paged decode == full forward for every family; page-table
 allocator invariants (tombstone reuse under eviction churn); engine state
-plumbing."""
+plumbing; the fused manual-TP decode region on a 1-wide mesh."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +11,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_smoke_config
 from repro.core import batched as BT
+from repro.dist.sharding import serve_manual_rules
 from repro.models.registry import get_model
 from repro.serving import engine as EG
 from repro.serving import page_table as PT
@@ -63,6 +66,59 @@ def test_decode_matches_forward(arch):
         errs.append(float(jnp.max(jnp.abs(
             logits - ref[:, t].astype(jnp.float32)))))
     assert max(errs) < 6e-2, (arch, errs)   # bf16 accumulation tolerance
+
+
+def _mesh_1x1():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "granite-moe-1b-a400m",
+                                  "qwen2-vl-7b"])
+def test_manual_decode_single_device_matches_reference(arch):
+    """``tp_impl="manual"`` on a 1-wide model axis routes through the fused
+    manual shard_map region (decode_manual_tp deliberately allows tp == 1)
+    and must match the no-rules single-device decode numerically."""
+    cfg = dataclasses.replace(get_smoke_config(arch), tp_impl="manual")
+    rules = serve_manual_rules(_mesh_1x1())
+    assert EG._manual_decode_ok(cfg, rules)
+    model = get_model(cfg)
+    params, _ = model.init(cfg, jax.random.PRNGKey(0))
+    B, T = 2, 6
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+
+    def run(r):
+        state, _ = EG.make_decode_state(cfg, B, S_max=32, page_size=4,
+                                        rules=r)
+        step = jax.jit(EG.make_serve_step(cfg, S_max=32, page_size=4,
+                                          rules=r))
+        outs = []
+        for t in range(T):
+            pos = jnp.full((B,), t, jnp.int32)
+            args = (params, state, toks[:, t:t + 1], pos)
+            if cfg.family == "vlm":
+                args += (jnp.full((3, B, 1), t, jnp.int32),)
+            lg, state = step(*args)
+            outs.append(np.asarray(lg))
+        return np.stack(outs)
+
+    np.testing.assert_allclose(run(rules), run(None), atol=5e-2, rtol=1e-2)
+
+
+def test_manual_decode_falls_back_when_inapplicable():
+    """Families without a paged dense stack (and non-divisible head counts)
+    must quietly take the gspmd path — same step function semantics."""
+    rules = serve_manual_rules(_mesh_1x1())
+    gemma = dataclasses.replace(get_smoke_config("gemma3-12b"),
+                                tp_impl="manual")
+    assert gemma.pattern_local and not EG._manual_decode_ok(gemma, rules)
+    ssm = dataclasses.replace(get_smoke_config("mamba2-2.7b"),
+                              tp_impl="manual")
+    assert not EG._manual_decode_ok(ssm, rules)
+    # gspmd impl never takes the fused path
+    dense = get_smoke_config("qwen2.5-32b")
+    assert not EG._manual_decode_ok(dense, rules)
 
 
 def test_page_allocator_tombstone_reuse():
