@@ -53,10 +53,11 @@ def page_churn(n_pages: int = 512, B: int = 16, page_size: int = 4,
     maxP = 16
     for r in range(rounds):
         for _ in range(8):
-            table, slots = PT.alloc_step(table, jnp.asarray(seq),
-                                         jnp.asarray(pos),
-                                         page_size=page_size)
+            table, slots, aborted = PT.alloc_step(table, jnp.asarray(seq),
+                                                  jnp.asarray(pos),
+                                                  page_size=page_size)
             assert (np.asarray(slots) >= 0).all(), "allocator aborted"
+            assert not np.asarray(aborted).any()
             pos += 1
         # evict half the sequences
         victims = rng.choice(B, size=B // 2, replace=False)
@@ -73,15 +74,52 @@ def page_churn(n_pages: int = 512, B: int = 16, page_size: int = 4,
     return occ
 
 
+def page_exhaust_reclaim(n_pages: int = 16, B: int = 4, page_size: int = 2):
+    """Pool-exhaustion lifecycle on the page allocator: fill every cell,
+    count the ABORTs surfaced per lane (never a wrapped write_slot), evict
+    half the sequences, and confirm the tombstoned slots are re-claimed by
+    the very next alloc_step (Proposition 2 as an allocator).  Returns
+    machine-independent gated counts."""
+    table = PT.create_table(n_pages)
+    seq = jnp.arange(B, dtype=jnp.int32)
+    steps_to_fill = (n_pages // B) * page_size
+    aborts_seen = 0
+    for pos in range(steps_to_fill + page_size):
+        table, slots, aborted = PT.alloc_step(
+            table, seq, jnp.full((B,), pos, jnp.int32),
+            page_size=page_size)
+        assert (np.asarray(slots) >= -1).all()
+        assert ((np.asarray(slots) >= 0) | np.asarray(aborted)
+                | (pos % page_size != 0)).all(), "silent drop"
+        aborts_seen += int(np.asarray(aborted).sum())
+    full_occ = float(BT.occupancy(table))
+    # evict half -> tombstones -> immediate reclaim, no rebuild
+    half = B // 2
+    table = PT.free_sequences(
+        table, seq[:half], jnp.full((half,), steps_to_fill, jnp.int32),
+        page_size=page_size, max_pages=n_pages)
+    tombs = int(table.num_tombs)
+    fresh = jnp.arange(B, B + half, dtype=jnp.int32)
+    table, slots, aborted = PT.alloc_step(
+        table, fresh, jnp.zeros((half,), jnp.int32), page_size=page_size)
+    reclaimed = int((np.asarray(slots) >= 0).sum())
+    assert not np.asarray(aborted).any()
+    return {"aborts_surfaced": aborts_seen, "occ_at_exhaustion": full_occ,
+            "tombstones_after_evict": tombs,
+            "reclaimed_next_alloc": reclaimed}
+
+
 def run(verbose: bool = True, fast: bool = False) -> dict:
     m, working, rounds = (256, 96, 20) if fast else (1024, 384, 40)
     ours_occ, ours_rebuilds, ours_aborts = churn(BT, m, working, rounds)
     base_occ, rebuilds, _ = churn(GN, m, working, rounds)
     pocc = page_churn(rounds=15 if fast else 40)
+    exhaust = page_exhaust_reclaim()
     out = {"ours_final_occ": ours_occ[-1], "ours_max_occ": max(ours_occ),
            "ours_aborts": ours_aborts,
            "noreuse_rebuilds": rebuilds, "noreuse_final_occ": base_occ[-1],
-           "page_table_max_occ": max(pocc)}
+           "page_table_max_occ": max(pocc),
+           "page_exhaust": exhaust}
     if verbose:
         print("bench_reuse — churn at fixed working set "
               f"(m={m}, live={working}, {rounds} rounds of 25% turnover)")

@@ -49,9 +49,9 @@ from repro.serving import page_table as PT
 table = PT.create_table(32)
 seqs = jnp.arange(4, dtype=jnp.int32)
 for pos in range(12):
-    table, slots = PT.alloc_step(table, seqs,
-                                 jnp.full((4,), pos, jnp.int32),
-                                 page_size=4)
+    table, slots, _ = PT.alloc_step(table, seqs,
+                                    jnp.full((4,), pos, jnp.int32),
+                                    page_size=4)
 print(f"   4 sequences x 12 tokens @ page_size 4 -> "
       f"{int(table.num_keys)} pages allocated")
 table = PT.free_sequences(table, seqs[:2], jnp.full((2,), 12, jnp.int32),

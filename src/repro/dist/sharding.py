@@ -168,7 +168,10 @@ def serve_manual_rules(mesh) -> ShardingRules:
     """Fused manual-TP decode: pages over (pod, data) ONLY — the model axis
     shards KV *heads* instead (``"kv"`` rule), matching the in_specs of the
     single manual shard_map region in ``serving/engine.py``.  Weights stay
-    Megatron-TP over model; activations replicated."""
+    Megatron-TP over model; activations replicated.  When the model axis is
+    wider than ``n_kv``, the engine TILES the pool/ring head dim to
+    ``n_kv·rep`` (``dist/tp.decode_kv_rep``) so the same ``"kv"`` mapping
+    divides — the replicated-KV-head layout needs no extra rule here."""
     rules: Rules = {
         "batch": ("data",),
         "pages": ("pod", "data"),

@@ -15,11 +15,16 @@ rejects partially-auto regions around the attention loops — see
 ``dist/compat.py``): the batch is explicitly split over the (pod, data)
 axes when divisible and replicated otherwise.
 
-The manual path quietly falls back to gspmd whenever it cannot apply (no
-active rules, no ``model`` axis, head counts / d_ff not divisible by the TP
-width, or already inside a manual region that owns the model axis) — CPU
-smoke tests therefore run the exact same numerics as the single-device
-reference.
+The train-side manual path quietly falls back to gspmd whenever it cannot
+apply (no active rules, no ``model`` axis, head counts / d_ff not divisible
+by the TP width, or already inside a manual region that owns the model
+axis) — CPU smoke tests therefore run the exact same numerics as the
+single-device reference.  The DECODE-side gate is stricter about silence:
+``decode_manual_unsupported`` returns a reason string for every refusal and
+``serving/engine`` logs it — a production mesh can never lose the fused
+path without a trace.  A model axis wider than ``n_kv`` is NOT a refusal at
+decode: KV heads are replicated across the surplus width
+(``decode_kv_rep``).
 
 Decode side (the fused manual serve step in ``serving/engine.py``): this
 module owns the gate (``decode_manual_tp``), the shard_map in_specs for the
@@ -139,38 +144,99 @@ def _mlp_manual(rules, mp, ln, x):
 # ---------------------------------------------------------------------------
 # Decode-side manual TP (used by serving/engine's fused serve step).
 
-def decode_manual_tp(cfg, rules) -> int:
-    """TP width for the fused manual decode region, 0 when inapplicable.
+def decode_kv_rep(cfg, tp: int) -> int:
+    """KV-head replication factor for the fused decode region at TP width
+    ``tp``: 1 when ``n_kv`` divides ``tp``'s complement (n_kv % tp == 0,
+    plain head sharding), ``tp // n_kv`` when the mesh is WIDER than the KV
+    head count (each KV head is replicated across the surplus width and
+    every chip keeps exactly one head — e.g. kv=8 on the 16-wide production
+    mesh, rep=2), and 0 when neither divides (unsupported shape)."""
+    if tp <= 0:
+        return 0
+    if cfg.n_kv % tp == 0:
+        return 1
+    if cfg.n_kv and tp % cfg.n_kv == 0:
+        return tp // cfg.n_kv
+    return 0
 
-    Requirements: ``tp_impl="manual"``, an active rule set with a ``model``
-    mesh axis not already manual, and head / FFN (or expert) counts divisible
-    by the TP width.  tp == 1 is deliberately allowed (see module doc)."""
-    if cfg.tp_impl != "manual" or rules is None:
-        return 0
+
+def decode_manual_unsupported(cfg, rules):
+    """Why the fused manual decode region cannot apply — None when it can.
+
+    The gate is shape-only: ``tp_impl="manual"``, an active rule set with a
+    ``model`` mesh axis not already manual, ``n_q`` divisible by the TP
+    width, a valid KV replication factor (``decode_kv_rep``), and a
+    divisible FFN (or expert) count.  tp == 1 is deliberately allowed (see
+    module doc).  Family gating lives in ``serving/engine`` (ssm / encdec
+    stay on the gspmd step)."""
+    if cfg.tp_impl != "manual":
+        return f"tp_impl={cfg.tp_impl!r} (not 'manual')"
+    if rules is None:
+        return "no active sharding rules"
     tp = rules.mesh.shape.get("model", 0)
-    if tp < 1 or "model" in ctx.current_manual_axes():
-        return 0
-    if cfg.n_q % tp or cfg.n_kv % tp:
-        return 0
+    if tp < 1:
+        return "mesh has no 'model' axis"
+    if "model" in ctx.current_manual_axes():
+        return "already inside a manual region owning 'model'"
+    if cfg.n_q % tp:
+        return f"n_q={cfg.n_q} not divisible by tp={tp}"
+    if not decode_kv_rep(cfg, tp):
+        return (f"n_kv={cfg.n_kv} neither divides nor is divided by "
+                f"tp={tp} (no whole-head shard or replication)")
     if cfg.family == "moe":
         if cfg.num_experts % tp:
-            return 0
+            return (f"num_experts={cfg.num_experts} not divisible by "
+                    f"tp={tp}")
     elif cfg.d_ff % tp:
+        return f"d_ff={cfg.d_ff} not divisible by tp={tp}"
+    return None
+
+
+def decode_manual_tp(cfg, rules) -> int:
+    """TP width for the fused manual decode region, 0 when inapplicable
+    (``decode_manual_unsupported`` gives the reason)."""
+    if decode_manual_unsupported(cfg, rules) is not None:
         return 0
-    return tp
+    return rules.mesh.shape["model"]
 
 
-def decode_param_specs(cfg, params, *, vocab_sharded: bool):
+def decode_param_specs(cfg, params, *, vocab_sharded: bool,
+                       kv_rep: int = 1):
     """shard_map in_specs (prefix pytree) for the fused manual decode region:
     stacked layer weights column/row-parallel over ``model`` (leading dim is
     the layer scan), everything else replicated.  ``vocab_sharded`` shards
-    the untied lm_head over the vocab dim (logits all_gathered after)."""
+    the untied lm_head over the vocab dim (logits all_gathered after).
+
+    ``kv_rep > 1`` (KV heads replicated across the surplus model width):
+    the K/V projections stay REPLICATED — each chip computes the full
+    [B, n_kv, hd] K/V (n_kv·d·hd flops, noise at decode) and slices its own
+    head in-region, which keeps the spec divisible without materialising a
+    tiled weight copy per step.
+
+    ``hybrid``: the Mamba backbone runs replicated (redundant identical
+    compute on every chip — the model axis carries no SSM work at decode);
+    only the ONE shared (attention + MLP) block is Megatron-sharded."""
+    kvw = P() if kv_rep > 1 else P(None, None, "model", None)
+    kvb = P() if kv_rep > 1 else P(None, "model", None)
+    if cfg.family == "hybrid":
+        sh_attn = {"wq": P(None, "model", None),
+                   "wk": P() if kv_rep > 1 else P(None, "model", None),
+                   "wv": P() if kv_rep > 1 else P(None, "model", None),
+                   "wo": P("model", None, None)}
+        if "bq" in params["shared"]["attn"]:
+            b1 = P() if kv_rep > 1 else P("model", None)
+            sh_attn.update(bq=P("model", None), bk=b1, bv=b1)
+        specs = {k: P() for k in params}
+        specs["shared"] = {
+            "attn": sh_attn, "ln1": P(), "ln2": P(),
+            "mlp": {"wi_gate": P(None, "model"), "wi_up": P(None, "model"),
+                    "wo": P("model", None)}}
+        return specs
     h = P(None, None, "model", None)                 # [L, d, H, hd]
-    attn = {"wq": h, "wk": h, "wv": h,
+    attn = {"wq": h, "wk": kvw, "wv": kvw,
             "wo": P(None, "model", None, None)}      # [L, H, hd, d]
     if "bq" in params["layers"]["attn"]:
-        b = P(None, "model", None)
-        attn.update(bq=b, bk=b, bv=b)
+        attn.update(bq=P(None, "model", None), bk=kvb, bv=kvb)
     layer = {"attn": attn, "ln1": P(), "ln2": P()}
     if cfg.family == "moe":
         e = P(None, "model", None, None)             # [L, E, d|f, f|d]

@@ -23,7 +23,8 @@ def paged_attention(q, k_pages, v_pages, page_ids, lens, *,
     return paged_attention_ref(q, k_pages, v_pages, page_ids, lens)
 
 
-def shard_heads(q, k_pages, v_pages, shard: int, n_shards: int):
+def shard_heads(q, k_pages, v_pages, shard: int, n_shards: int,
+                kv_rep: int = 1):
     """Slice (q, k_pages, v_pages) to TP shard ``shard`` of ``n_shards``
     along the head dims — the per-shard view the fused manual decode region
     (serving/engine, ``tp_impl="manual"``) feeds this kernel per chip.
@@ -31,13 +32,25 @@ def shard_heads(q, k_pages, v_pages, shard: int, n_shards: int):
     GQA grouping is contiguous (q head h reads kv head h // G), so slicing
     both head dims by equal contiguous blocks keeps every query's kv head
     local to its shard: kernel(shard s) == kernel(full)[:, s·QH/n : (s+1)·
-    QH/n] exactly.  Requires QH and KH divisible by ``n_shards``."""
+    QH/n] exactly.  Requires QH divisible by ``n_shards`` and KH divisible
+    by ``n_shards`` — OR, when the shard count exceeds the KV head count,
+    ``kv_rep = n_shards / KH`` > 1: each KV head is REPLICATED on ``kv_rep``
+    consecutive shards (shard s keeps original head s // kv_rep), whose q
+    slices partition that head's query group, so the same exact-slice
+    identity holds."""
     QH = q.shape[1]
     KH = k_pages.shape[2]
-    if QH % n_shards or KH % n_shards:
-        raise ValueError(f"heads not divisible: QH={QH} KH={KH} "
-                         f"n_shards={n_shards}")
-    qh, kh = QH // n_shards, KH // n_shards
+    if kv_rep == 1:
+        if QH % n_shards or KH % n_shards:
+            raise ValueError(f"heads not divisible: QH={QH} KH={KH} "
+                             f"n_shards={n_shards}")
+        kh, k0 = KH // n_shards, shard * (KH // n_shards)
+    else:
+        if QH % n_shards or KH * kv_rep != n_shards:
+            raise ValueError(f"invalid replication: QH={QH} KH={KH} "
+                             f"n_shards={n_shards} kv_rep={kv_rep}")
+        kh, k0 = 1, shard // kv_rep
+    qh = QH // n_shards
     return (q[:, shard * qh:(shard + 1) * qh],
-            k_pages[:, :, shard * kh:(shard + 1) * kh],
-            v_pages[:, :, shard * kh:(shard + 1) * kh])
+            k_pages[:, :, k0:k0 + kh],
+            v_pages[:, :, k0:k0 + kh])

@@ -124,10 +124,10 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
         # tp_impl=manual uses the fused-decode layout (pages over pod/data,
         # KV heads over model) — but only when the fused region actually
         # applies; otherwise keep the baseline pages-over-every-axis layout
-        # (the engine falls back to the gspmd step anyway).
+        # (the engine falls back to the gspmd step, and logs why).
         man_rules = SH.serve_manual_rules(mesh)
-        rules = (man_rules if EG._manual_decode_ok(cfg, man_rules)
-                 else SH.serve_rules(mesh))
+        fused = EG._manual_decode_ok(cfg, man_rules)
+        rules = man_rules if fused else SH.serve_rules(mesh)
         params_sds, axes = _abstract(lambda k: model.init(cfg, k), key)
         params_sh = _shardings(rules, axes, params_sds)
         B = shape.global_batch
@@ -157,6 +157,10 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
     meta = {"arch": arch_id, "shape": shape_name,
             "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
             "kind": shape.kind}
+    if shape.kind == "decode":
+        # which TP path the cell actually lowered — artifacts must prove
+        # the fused region applied, never a quiet fallback (--expect-fused)
+        meta["decode_tp"] = "manual-fused" if fused else "gspmd"
     return cfg, shape, lowered, compiled, meta
 
 
@@ -199,6 +203,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str,
         rec.update(status="ok", compile_s=round(t_compile, 1),
                    kind=meta["kind"], memory_analysis=mem_rec,
                    roofline=rl.to_dict())
+        if "decode_tp" in meta:
+            rec["decode_tp"] = meta["decode_tp"]
         if verbose:
             print(f"[{tag}] compiled in {t_compile:.0f}s  "
                   f"flops/chip={rl.hlo_flops_per_chip:.3e}  "
@@ -232,6 +238,10 @@ def main():
     ap.add_argument("--set", action="append", default=[],
                     help="cfg override key=value (e.g. tp_impl=manual)")
     ap.add_argument("--tag", default="", help="artifact name suffix")
+    ap.add_argument("--expect-fused", default="",
+                    help="comma-separated archs whose decode cells MUST "
+                         "take the fused manual-TP path (exit 1 on any "
+                         "quiet gspmd fallback)")
     args = ap.parse_args()
 
     overrides = {}
@@ -263,7 +273,25 @@ def main():
     n_err = sum(r["status"] == "error" for r in results)
     print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors "
           f"of {len(results)} cells")
-    return 0 if n_err == 0 else 1
+    not_fused = []
+    if args.expect_fused:
+        expect = {a.strip() for a in args.expect_fused.split(",") if a}
+        seen = set()
+        for r in results:
+            if (r["arch"] not in expect or r["status"] != "ok"
+                    or SHAPES[r["shape"]].kind != "decode"):
+                continue
+            seen.add(r["arch"])
+            if r.get("decode_tp") != "manual-fused":
+                not_fused.append(f"{r['arch']}/{r['shape']}/{r['mesh']}")
+        # an expected arch with NO ok decode cell (typo / rename / all
+        # skipped) must fail too, or the gate is silently vacuous
+        for arch in sorted(expect - seen):
+            not_fused.append(f"{arch}/<no ok decode cell>")
+        if not_fused:
+            print("expect-fused VIOLATED (quiet gspmd fallback): "
+                  + ", ".join(not_fused))
+    return 0 if n_err == 0 and not not_fused else 1
 
 
 if __name__ == "__main__":

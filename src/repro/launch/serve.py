@@ -45,6 +45,7 @@ class ContinuousBatcher:
         self.next_seq_id = batch
         self.rng = np.random.default_rng(seed + 1)
         self.evictions = 0
+        self.rebuilds = 0
         self.tokens = jnp.zeros((batch, 1), jnp.int32)
 
     def decode_round(self, steps: int):
@@ -59,8 +60,25 @@ class ContinuousBatcher:
             else:
                 logits, self.state = self.step_fn(
                     self.params, self.state, self.tokens, positions)
+            prev_tokens = self.tokens
             self.tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            self.pos += 1
+            # the engine is the source of truth: aborted lanes refused the
+            # token (their pos did NOT advance — we retry after rebuilding)
+            self.pos = np.asarray(self.state["pos"]).copy()
+            aborted = self.state.get("aborted")
+            if aborted is not None and bool(np.asarray(aborted).any()):
+                # an aborted lane's logits were computed with its current
+                # page missing — keep the REFUSED input token so the
+                # post-rebuild retry re-issues it, not a garbage argmax
+                self.tokens = jnp.where(jnp.asarray(aborted)[:, None],
+                                        prev_tokens, self.tokens)
+                # the Section 4.3 path, live: grow the pool, re-hash, move
+                # the KV pages along, clear the flags; the refused tokens
+                # are re-issued on the next step at the same position
+                n_pages = self.state["pools"].k.shape[1]
+                self.state = EG.rebuild_page_table(self.state,
+                                                   n_pages=n_pages * 2)
+                self.rebuilds += 1
             # evict finished sequences; re-admit fresh ones in their slot
             done = np.nonzero(self.pos >= self.lengths)[0]
             if len(done) and "table" in self.state:

@@ -22,6 +22,25 @@ def num_shared_invocations(cfg) -> int:
     return cfg.num_layers // cfg.shared_attn_every
 
 
+def mamba_decode_chunk(cfg, layer_params, states, x, lo: int, hi: int):
+    """One-token decode through mamba layers [lo, hi): x [B,1,d] ->
+    (x', states' for the chunk).  Pure per-lane jnp — the fused manual-TP
+    serve step runs it replicated on every chip (identical redundant
+    compute), the gspmd step runs it as-is."""
+    chunk_p = jax.tree.map(lambda t: t[lo:hi], layer_params)
+    chunk_s = jax.tree.map(lambda t: t[lo:hi], states)
+
+    def body(x, xs):
+        lp, st = xs
+        h, st2 = ssm.mamba_decode_step(
+            lp["mamba"], nn.rmsnorm(lp["ln"], x), cfg, st)
+        return x + h, st2
+
+    x, s2 = jax.lax.scan(body, x, (chunk_p, chunk_s),
+                         unroll=(hi - lo) if cfg.unroll_layers else 1)
+    return x, s2
+
+
 def _mamba_layer_init(key, cfg, dtype):
     p, a = ssm.mamba_init(key, cfg, dtype)
     pn, an = nn.norm_init(cfg.d_model, dtype)

@@ -340,6 +340,21 @@ def attn_out_decode(p, o):
     return jnp.einsum("bhk,hkd->bd", o, p["wo"])
 
 
+def kv_head_slice(k, v, shard, kv_rep: int):
+    """Per-chip KV head slice when KV heads are REPLICATED across a model
+    axis wider than ``n_kv`` (kv_rep = tp / n_kv > 1): k/v [B, n_kv, hd]
+    computed from replicated weights; chip ``shard`` keeps original head
+    ``shard // kv_rep`` (exactly one head per chip — chips ``shard`` and
+    ``shard ^ 1 ... `` holding the same head serve disjoint q-head groups,
+    so nothing is double-counted downstream).  Identity when kv_rep == 1
+    (the weights were already head-sharded by the enclosing shard_map)."""
+    if kv_rep <= 1:
+        return k, v
+    head = shard // kv_rep
+    return (jax.lax.dynamic_slice_in_dim(k, head, 1, axis=1),
+            jax.lax.dynamic_slice_in_dim(v, head, 1, axis=1))
+
+
 def self_attention(p, x, positions, cfg, *, window: int = 0,
                    mrope_positions=None, causal: bool = True):
     """Full-sequence self attention (train / prefill)."""

@@ -53,6 +53,30 @@ def _capacity(T: int, k: int, E: int, factor: float) -> int:
     return min(T, max(8, -(-c // 8) * 8))
 
 
+# Router snap grid (numerics): bf16 reduction-order noise across shardings
+# perturbs the router input by ~1e-3, so raw top_k can pick DIFFERENT
+# experts per sharding for near-tie logits — a full expert flip, i.e. O(1)
+# logits drift from O(eps) numeric noise.  Snapping the scores to a coarse
+# grid and breaking ties by expert index makes the selection a step
+# function with margins far wider than the noise: shardings disagree only
+# when a score sits within eps of a grid edge.  The snap is applied to the
+# raw LOGITS (O(1) scale regardless of E) — never to the softmax probs,
+# whose ~1/E magnitude would collapse every expert into one grid cell at
+# production expert counts (E=128 -> probs ~0.008 << any useful grid).
+ROUTER_SNAP_GRID = 1.0 / 64.0
+
+
+def _router_top_k(logits, probs, k: int, E: int):
+    """Deterministic, sharding-robust expert selection: top-k of the
+    grid-snapped router logits with a lower-expert-index tie-break; gate
+    values still come from the exact probabilities."""
+    snapped = jnp.round(logits / ROUTER_SNAP_GRID)        # [T,E] small ints
+    idx = jnp.arange(E, dtype=jnp.float32)
+    _, ids = jax.lax.top_k(snapped * (E + 1.0) - idx[None, :], k)
+    gates = jnp.take_along_axis(probs, ids, axis=-1)      # [T,k]
+    return gates, ids
+
+
 def _moe_local(x, router, wig, wiu, wo, *, k: int, E: int, E_local: int,
                e_offset, C: int):
     """Per-chip MoE: x [T,d] local tokens (replicated over model axis),
@@ -60,7 +84,7 @@ def _moe_local(x, router, wig, wiu, wo, *, k: int, E: int, E_local: int,
     T, d = x.shape
     logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router)
     probs = jax.nn.softmax(logits, axis=-1)               # [T,E]
-    gates, ids = jax.lax.top_k(probs, k)                  # [T,k]
+    gates, ids = _router_top_k(logits, probs, k, E)       # [T,k]
     gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
 
     # aux load-balance loss (Switch-style): E * sum_e f_e * P_e

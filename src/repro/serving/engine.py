@@ -19,13 +19,27 @@ attention/MLP/MoE, and the read-out.  Layout: KV pools page-sharded over
 heads end-to-end — no cross-model K/V gather), page-table metadata
 replicated (every chip runs the identical lookup), weights Megatron
 column/row-parallel with one psum after attention and one after the
-MLP/MoE.  Families without a paged dense stack (ssm / hybrid / encdec /
-local-window gemma3) and non-divisible head counts fall back to the gspmd
-path (dist/tp.decode_manual_tp).
+MLP/MoE.  When the model axis is WIDER than ``n_kv`` (e.g. kv=8 on the
+16-wide production mesh), KV heads are REPLICATED across the surplus width
+(``dist/tp.decode_kv_rep``): pools/ring state carry ``n_kv·rep`` tiled
+heads so each chip still keeps exactly one resident head.  Local-window
+(gemma3) ring layers and the hybrid family's Mamba backbone + shared
+attention block run INSIDE the same region (ring/ssm state per-lane; the
+mamba math is replicated redundant compute over the model axis).  Only ssm
+(attention-free) and encdec remain on the gspmd step — every fallback is
+logged, never silent (``_manual_decode_reason``).
+
+Liveness (all paths): ``state["active"]`` masks finished/padding lanes out
+of page allocation and freezes their ``pos`` (otherwise each dead lane
+leaks a phantom page every ``page_size`` steps); ``state["aborted"]``
+latches lanes whose allocation ABORTed (pool exhausted) — their token is
+refused (no KV write, pos frozen) until the caller evicts or runs the
+Section 4.3 ``rebuild_page_table``.
 """
 from __future__ import annotations
 
 import functools
+import logging
 import math
 from typing import Any, Dict, Optional, Tuple
 
@@ -36,6 +50,7 @@ from jax.sharding import PartitionSpec as P
 from repro.dist import ctx
 from repro.dist import tp as TP
 from repro.dist.compat import shard_map
+from repro.models import hybrid as HY
 from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import nn
@@ -45,6 +60,8 @@ from repro.serving import paged
 from repro.core import batched as BT
 
 DEFAULT_PAGE_SIZE = 256
+
+logger = logging.getLogger(__name__)
 
 
 # ---------------------------------------------------------------------------
@@ -78,12 +95,27 @@ def _pd_axes(rules):
     return tuple(a for a in ("pod", "data") if a in rules.mesh.shape)
 
 
+# The two genuinely unsupported families — everything else (dense incl.
+# the gemma3 local-window pattern, moe, vlm, hybrid) takes the fused path.
+_MANUAL_UNSUPPORTED_FAMILY = {
+    "ssm": "attention-free SSM stack: no model-axis work in the region",
+    "encdec": "cross-attention decode state not yet inside the fused region",
+}
+
+
+def _manual_decode_reason(cfg, rules) -> Optional[str]:
+    """Why ``tp_impl="manual"`` decode falls back to gspmd — None when the
+    fused region applies."""
+    fam = _MANUAL_UNSUPPORTED_FAMILY.get(cfg.family)
+    if fam is not None:
+        return fam
+    return TP.decode_manual_unsupported(cfg, rules)
+
+
 def _manual_decode_ok(cfg, rules) -> bool:
-    """The fused manual-TP decode region applies: paged dense stack
-    (dense/moe/vlm, no local-window pattern) and divisible head / ff /
-    expert counts (dist/tp.decode_manual_tp)."""
-    return (cfg.family in ("dense", "moe", "vlm") and not cfg.pattern_local
-            and TP.decode_manual_tp(cfg, rules) > 0)
+    """The fused manual-TP decode region applies (family supported AND the
+    shape gate dist/tp.decode_manual_tp passes)."""
+    return _manual_decode_reason(cfg, rules) is None
 
 
 # ---------------------------------------------------------------------------
@@ -118,26 +150,35 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
     dtype = cfg.activation_dtype()
     maxP, n_pages = plan_pages(cfg, B, S_max, page_size, n_chips)
     n_paged, n_ring = _n_attn_layers(cfg)
+    manual_tp = rules is not None and _manual_decode_ok(cfg, rules)
+    # fused-manual layout with a model axis wider than n_kv: the pool/ring
+    # head dim is physically tiled to n_kv·rep so the "kv" logical axis
+    # divides the mesh and every chip keeps exactly one resident head copy
+    kv_rep = (TP.decode_kv_rep(cfg, rules.mesh.shape["model"])
+              if manual_tp else 1)
+    n_kv_st = cfg.n_kv * kv_rep
 
     def build() -> Dict[str, Any]:
         state: Dict[str, Any] = {
             "pos": jnp.zeros((B,), jnp.int32),
             "seq_ids": jnp.arange(B, dtype=jnp.int32),
+            "active": jnp.ones((B,), bool),
+            "aborted": jnp.zeros((B,), bool),
         }
         if n_paged:
             state["table"] = PT.create_table(n_pages)
             kv_dtype = (jnp.int8 if cfg.kv_cache_dtype == "int8"
                         else dtype)
             state["pools"] = paged.make_pools(n_paged, n_pages, page_size,
-                                              cfg.n_kv, cfg.hd, kv_dtype)
+                                              n_kv_st, cfg.hd, kv_dtype)
             if cfg.kv_cache_dtype == "int8":
                 state["pool_scales"] = paged.make_pool_scales(
-                    n_paged, n_pages, page_size, cfg.n_kv)
+                    n_paged, n_pages, page_size, n_kv_st)
         if n_ring:
             w = cfg.local_window
-            state["ring_k"] = jnp.zeros((n_ring, B, w, cfg.n_kv, cfg.hd),
+            state["ring_k"] = jnp.zeros((n_ring, B, w, n_kv_st, cfg.hd),
                                         dtype)
-            state["ring_v"] = jnp.zeros((n_ring, B, w, cfg.n_kv, cfg.hd),
+            state["ring_v"] = jnp.zeros((n_ring, B, w, n_kv_st, cfg.hd),
                                         dtype)
             state["ring_pos"] = jnp.full((B, w), -1, jnp.int32)
         if cfg.family in ("ssm", "hybrid"):
@@ -153,8 +194,8 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
                 (cfg.num_layers, B, S_src, cfg.n_kv, cfg.hd), dtype)
         return state
 
-    axes: Dict[str, Any] = {"pos": (None,), "seq_ids": (None,)}
-    manual_tp = rules is not None and _manual_decode_ok(cfg, rules)
+    axes: Dict[str, Any] = {"pos": (None,), "seq_ids": (None,),
+                            "active": (None,), "aborted": (None,)}
     if n_paged:
         axes["table"] = BT.HashTable(table=(None,), num_keys=(),
                                      num_tombs=(), seed=())
@@ -165,22 +206,72 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
                      else paged.POOL_SCALE_AXES)
             axes["pool_scales"] = paged.PoolScales(k=sc_ax, v=sc_ax)
     if n_ring:
-        axes["ring_k"] = ("layer", "batch", None, "kv", None)
-        axes["ring_v"] = ("layer", "batch", None, "kv", None)
-        axes["ring_pos"] = ("batch", None)
+        # fused manual region: ring heads over model (batch replicated —
+        # activations in the region are); gspmd: per-sequence over data
+        ring_ax = (("layer", None, None, "kv", None) if manual_tp
+                   else ("layer", "batch", None, "kv", None))
+        axes["ring_k"] = ring_ax
+        axes["ring_v"] = ring_ax
+        axes["ring_pos"] = (None, None) if manual_tp else ("batch", None)
     if cfg.family in ("ssm", "hybrid"):
         is_ax = lambda x: (isinstance(x, tuple)
                            and not isinstance(x, ssm.MambaState)
                            and all(e is None or isinstance(e, str)
                                    for e in x))
-        axes["ssm"] = jax.tree.map(lambda ax: ("layer",) + tuple(ax),
-                                   ssm.MAMBA_STATE_AXES, is_leaf=is_ax)
+        # fused manual region: ssm state replicated (the mamba math runs as
+        # identical redundant compute on every chip)
+        axes["ssm"] = jax.tree.map(
+            lambda ax: (("layer",) + (None,) * len(ax) if manual_tp
+                        else ("layer",) + tuple(ax)),
+            ssm.MAMBA_STATE_AXES, is_leaf=is_ax)
     if cfg.family == "encdec":
         axes["cross_k"] = ("layer", "batch", None, "kv", None)
         axes["cross_v"] = ("layer", "batch", None, "kv", None)
 
     state = jax.eval_shape(build) if abstract else build()
     return state, axes
+
+
+def rebuild_page_table(state: Dict[str, Any], *, n_pages: Optional[int] = None,
+                       seed: Optional[int] = None) -> Dict[str, Any]:
+    """Section 4.3 ABORT recovery, live in serving: re-hash the page table
+    (into ``n_pages`` cells — pass a larger pool to actually gain capacity;
+    with tombstone reuse a same-size rebuild only changes the seed, since
+    the reuse table aborts only when every cell holds a live key) and MOVE
+    the physical KV pages to their keys' new slots — the cell index IS the
+    page, so the pages must follow the re-hash.  Clears ``aborted``.
+
+    Host-side, outside jit: aborts are rare (true pool exhaustion), the
+    rebuild cost is amortized exactly as in the paper.  ``n_pages`` must
+    keep the pool divisible by the mesh's chip/page-shard count."""
+    table = state["table"]
+    m = BT.size(table)
+    new_m = m if n_pages is None else n_pages
+    fresh, old_slots, new_slots, live = PT.rehash(table, new_m, seed)
+    if bool(jnp.any(live & (new_slots < 0))):
+        # a live key failed to land (n_pages smaller than the live set):
+        # proceeding would orphan pages and wrap dst=-1 into the last row
+        raise ValueError(
+            f"rebuild_page_table: {int(jnp.sum(live & (new_slots < 0)))} "
+            f"live pages do not fit in n_pages={new_m}")
+
+    def move(pool, fill):
+        shp = pool.shape[:1] + (new_m,) + pool.shape[2:]
+        src = jnp.where(live, old_slots, 0)
+        dst = jnp.where(live, new_slots, new_m)      # OOB -> dropped
+        return jnp.full(shp, fill, pool.dtype).at[:, dst].set(
+            pool[:, src], mode="drop")
+
+    state = dict(state)
+    state["table"] = fresh
+    state["pools"] = paged.PagedPools(k=move(state["pools"].k, 0),
+                                      v=move(state["pools"].v, 0))
+    if "pool_scales" in state:
+        state["pool_scales"] = paged.PoolScales(
+            k=move(state["pool_scales"].k, 1),
+            v=move(state["pool_scales"].v, 1))
+    state["aborted"] = jnp.zeros_like(state["aborted"])
+    return state
 
 
 # ---------------------------------------------------------------------------
@@ -366,6 +457,12 @@ def make_serve_step(cfg, *, S_max: int, rules=None,
     if rules is not None and _manual_decode_ok(cfg, rules):
         return _make_manual_serve_step(cfg, S_max=S_max, rules=rules,
                                        page_size=page_size)
+    if rules is not None and cfg.tp_impl == "manual":
+        # never a silent fallback: the caller asked for the fused region
+        logger.warning(
+            "fused manual-TP decode unavailable for %s — %s; "
+            "falling back to the gspmd serve step",
+            cfg.name, _manual_decode_reason(cfg, rules))
     n_chips = _n_chips(rules)
     family = cfg.family
 
@@ -383,43 +480,94 @@ def make_serve_step(cfg, *, S_max: int, rules=None,
 # Fused manual-TP decode (tp_impl="manual"): the whole step in ONE manual
 # shard_map region over every mesh axis.
 
+def _qkv_decode_shard(ap, x, kv_rep: int):
+    """Per-chip decode QKV inside the fused manual region.  ``kv_rep == 1``:
+    the K/V weights were head-sharded by the enclosing shard_map and the
+    projection is already local.  ``kv_rep > 1`` (model axis wider than
+    n_kv): the K/V weights arrive REPLICATED — compute the full [B, n_kv,
+    hd] K/V and keep this chip's single replicated head."""
+    q, k, v = L.attn_qkv_decode(ap, x)
+    k, v = L.kv_head_slice(k, v, jax.lax.axis_index("model"), kv_rep)
+    return q, k, v
+
+
 def _paged_attn_shard(cfg, x, ap, pk, pv, scales, lp, write_slot, positions,
-                      mrope, *, chip_pd, npr, page_size, pd_axes):
+                      mrope, *, chip_pd, npr, page_size, pd_axes,
+                      kv_rep=1):
     """One attention sublayer inside the fused manual region, local head
     shard end-to-end: column-parallel QKV, KV write into the chip's own
     pages, per-chip paged attention over local (page, head) slices, lse
-    merge across the page axes only, row-parallel out + one psum."""
+    merge across the page axes only, row-parallel out + one psum.  With
+    ``kv_rep > 1`` each chip holds ONE replicated KV head serving its
+    (disjoint) slice of that head's query group — the psum over ``model``
+    still sums distinct q-head contributions exactly once."""
     B = x.shape[0]
-    q, k, v = L.attn_qkv_decode(ap, x[:, 0])       # local head shard
+    q, k, v = _qkv_decode_shard(ap, x[:, 0], kv_rep)
     q = _rope_single(cfg, q, positions, mrope)
     k = _rope_single(cfg, k, positions, mrope)
     pk, pv, scales = paged.write_token_kv(pk, pv, k, v, write_slot,
                                           positions, chip_pd, npr,
                                           page_size, scales=scales)
-    kv_l = k.shape[1]                              # n_kv / tp
-    G = cfg.n_q // cfg.n_kv
-    qg = q.reshape(B, kv_l, G, cfg.hd)             # grouping is head-local
+    kv_l = k.shape[1]                              # n_kv·rep / tp
+    G_l = q.shape[1] // kv_l                       # local group size
+    qg = q.reshape(B, kv_l, G_l, cfg.hd)           # grouping is head-local
     o, m, l = paged.attend_local(qg, pk, pv, lp, positions, page_size,
                                  scales=scales)
     out = paged.merge_global(o, m, l, pd_axes)     # heads never cross chips
-    out = out.reshape(B, kv_l * G, cfg.hd).astype(x.dtype)
+    out = out.reshape(B, kv_l * G_l, cfg.hd).astype(x.dtype)
     y = jax.lax.psum(L.attn_out_decode(ap, out), "model")
     if scales is None:
         scales = (jnp.zeros((), jnp.bfloat16),) * 2   # dummy pytree
     return y[:, None], pk, pv, scales
 
 
+def _ring_attn_shard(cfg, x, ap, ring_k_l, ring_v_l, ring_pos, positions,
+                     kv_rep=1):
+    """gemma3 local-window layer inside the fused manual region: the ring
+    buffer is head-sharded over ``model`` (same tiled-head layout as the
+    pools), each chip attends its own q-head slice against its resident KV
+    head's full window — the softmax needs no cross-chip merge — then
+    row-parallel out + one psum.  x [B,1,d]; ring_*_l [B,W,kv_l,hd]."""
+    B = x.shape[0]
+    W = ring_k_l.shape[1]
+    q, k, v = _qkv_decode_shard(ap, x[:, 0], kv_rep)
+    q = _rope_single(cfg, q, positions)
+    k = _rope_single(cfg, k, positions)
+    slot = positions % W
+    ring_k_l = ring_k_l.at[jnp.arange(B), slot].set(k.astype(ring_k_l.dtype))
+    ring_v_l = ring_v_l.at[jnp.arange(B), slot].set(v.astype(ring_v_l.dtype))
+
+    kv_l = k.shape[1]
+    G_l = q.shape[1] // kv_l
+    qg = q.reshape(B, kv_l, G_l, cfg.hd)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg.astype(jnp.float32),
+                   ring_k_l.astype(jnp.float32)) / math.sqrt(cfg.hd)
+    ok = (ring_pos >= 0) & (ring_pos <= positions[:, None]) & \
+        (ring_pos > positions[:, None] - W)
+    ok = ok.at[jnp.arange(B), slot].set(True)
+    s = jnp.where(ok[:, None, None, :], s, paged.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkd->bkgd", p, ring_v_l.astype(jnp.float32))
+    o = o.reshape(B, kv_l * G_l, cfg.hd).astype(x.dtype)
+    y = jax.lax.psum(L.attn_out_decode(ap, o), "model")
+    return y[:, None], ring_k_l, ring_v_l
+
+
 def _make_manual_serve_step(cfg, *, S_max: int, rules,
                             page_size: int = DEFAULT_PAGE_SIZE):
     """Decode step for ``tp_impl="manual"``: page-table alloc + wait-free
     lookup + compaction + all layers + read-out fused into a single manual
-    shard_map (see module docstring for the layout)."""
+    shard_map (see module docstring for the layout).  Covers the dense /
+    moe / vlm stacked scan, the gemma3 local:global superblocks (ring
+    buffers head-sharded in-region) and the hybrid mamba backbone + shared
+    attention block (mamba replicated, shared block Megatron-sharded)."""
     mesh = rules.mesh
     pd_axes = _pd_axes(rules)
     n_pd = 1
     for a in pd_axes:
         n_pd *= mesh.shape[a]
     tp = mesh.shape["model"]
+    kv_rep = TP.decode_kv_rep(cfg, tp)
     maxP = -(-S_max // page_size)
     vocab_sharded = (not cfg.tie_embeddings) and cfg.vocab_size % tp == 0
 
@@ -436,50 +584,70 @@ def _make_manual_serve_step(cfg, *, S_max: int, rules,
         if "pool_scales" in state:
             sc = P(None, pd_axes or None, None, "model")
             state_specs["pool_scales"] = paged.PoolScales(k=sc, v=sc)
+        if "ring_k" in state:
+            ring_spec = P(None, None, None, "model", None)
+            state_specs["ring_k"] = ring_spec
+            state_specs["ring_v"] = ring_spec
         param_specs = TP.decode_param_specs(cfg, params,
-                                            vocab_sharded=vocab_sharded)
+                                            vocab_sharded=vocab_sharded,
+                                            kv_rep=kv_rep)
         mr_spec = P() if mrope_positions is not None else None
 
         def body(params, state, tokens, positions, mrope):
             x = nn.embed_lookup(params["embed"], tokens)      # replicated
             new_state = dict(state)
             chip_pd = _chip_idx(pd_axes, mesh)
+            act = state["active"] & ~state["aborted"]
             # the paper's lookup, once per step, identical on every chip
-            table, write_slot = PT.alloc_step(state["table"],
-                                              state["seq_ids"], positions,
-                                              page_size=page_size)
+            table, write_slot, aborts = PT.alloc_step(
+                state["table"], state["seq_ids"], positions,
+                page_size=page_size, active=act)
             slots = PT.lookup_pages(table, state["seq_ids"], positions,
                                     page_size=page_size, max_pages=maxP)
             lp = paged.compact_local(slots, chip_pd, npr, cap)
             new_state["table"] = table
-            sk, sv = _scale_xs(cfg, state, cfg.num_layers)
+            new_state["aborted"] = state["aborted"] | aborts
 
-            def layer(x, xs):
-                lpar, pk, pv, sk_l, sv_l = xs
-                h, pk, pv, sc = _paged_attn_shard(
-                    cfg, nn.rmsnorm(lpar["ln1"], x), lpar["attn"], pk, pv,
-                    _scales_in(cfg, sk_l, sv_l), lp, write_slot, positions,
-                    mrope, chip_pd=chip_pd, npr=npr, page_size=page_size,
-                    pd_axes=pd_axes)
-                x = x + h
-                xn = nn.rmsnorm(lpar["ln2"], x)
-                if cfg.family == "moe":
-                    y = MOE.moe_decode_local(lpar["moe"], xn, cfg)
-                else:
-                    y = TP.mlp_decode_manual(lpar["mlp"], xn)
-                return x + y, (pk, pv) + tuple(sc)
+            attn = functools.partial(
+                _paged_attn_shard, cfg, lp=lp, write_slot=write_slot,
+                positions=positions, chip_pd=chip_pd, npr=npr,
+                page_size=page_size, pd_axes=pd_axes, kv_rep=kv_rep)
 
-            x_out, (pk, pv, sk2, sv2) = jax.lax.scan(
-                layer, x, (params["layers"], state["pools"].k,
-                           state["pools"].v, sk, sv),
-                unroll=cfg.scan_unroll)
-            new_state["pools"] = paged.PagedPools(k=pk, v=pv)
-            if cfg.kv_cache_dtype == "int8":
-                new_state["pool_scales"] = paged.PoolScales(k=sk2, v=sv2)
+            if cfg.pattern_local:
+                x_out = _gemma_layers_shard(cfg, params, state, new_state,
+                                            x, attn, positions, kv_rep)
+            elif cfg.family == "hybrid":
+                x_out = _hybrid_layers_shard(cfg, params, state, new_state,
+                                             x, attn)
+            else:
+                sk, sv = _scale_xs(cfg, state, cfg.num_layers)
+
+                def layer(x, xs):
+                    lpar, pk, pv, sk_l, sv_l = xs
+                    h, pk, pv, sc = attn(
+                        nn.rmsnorm(lpar["ln1"], x), lpar["attn"], pk, pv,
+                        _scales_in(cfg, sk_l, sv_l), mrope=mrope)
+                    x = x + h
+                    xn = nn.rmsnorm(lpar["ln2"], x)
+                    if cfg.family == "moe":
+                        y = MOE.moe_decode_local(lpar["moe"], xn, cfg)
+                    else:
+                        y = TP.mlp_decode_manual(lpar["mlp"], xn)
+                    return x + y, (pk, pv) + tuple(sc)
+
+                x_out, (pk, pv, sk2, sv2) = jax.lax.scan(
+                    layer, x, (params["layers"], state["pools"].k,
+                               state["pools"].v, sk, sv),
+                    unroll=cfg.scan_unroll)
+                new_state["pools"] = paged.PagedPools(k=pk, v=pv)
+                if cfg.kv_cache_dtype == "int8":
+                    new_state["pool_scales"] = paged.PoolScales(k=sk2,
+                                                                v=sv2)
             x_out = nn.rmsnorm(params["final_norm"], x_out)
             logits = TP.logits_decode_manual(cfg, params, x_out,
                                              vocab_sharded=vocab_sharded)
-            new_state["pos"] = positions + 1
+            new_state["pos"] = jnp.where(act & ~aborts, positions + 1,
+                                         positions)
             return logits[:, 0].astype(jnp.float32), new_state
 
         mapped = shard_map(
@@ -491,17 +659,108 @@ def _make_manual_serve_step(cfg, *, S_max: int, rules,
     return serve_step
 
 
-def _page_ops(cfg, state, positions, *, S_max, page_size, n_chips, rules):
+def _gemma_layers_shard(cfg, params, state, new_state, x, attn, positions,
+                        kv_rep):
+    """gemma3 superblocks inside the fused manual region: ``pattern_local``
+    ring layers (head-sharded window attention) + 1 paged global layer per
+    group — the manual twin of ``_gemma_layers``."""
+    pat = cfg.pattern_local
+    group = pat + 1
+    ng = cfg.num_layers // group
+    stacked = jax.tree.map(
+        lambda t: t.reshape((ng, group) + t.shape[1:]), params["layers"])
+    B, W = state["ring_pos"].shape
+    ring_k = state["ring_k"].reshape((ng, pat) + state["ring_k"].shape[1:])
+    ring_v = state["ring_v"].reshape((ng, pat) + state["ring_v"].shape[1:])
+    sk, sv = _scale_xs(cfg, state, ng)
+
+    def body(x, xs):
+        grp, rks, rvs, pk, pv, sk_l, sv_l = xs
+        new_rk, new_rv = [], []
+        for i in range(pat):
+            sub = jax.tree.map(lambda t: t[i], grp)
+            h, rk2, rv2 = _ring_attn_shard(
+                cfg, nn.rmsnorm(sub["ln1"], x), sub["attn"], rks[i],
+                rvs[i], state["ring_pos"], positions, kv_rep)
+            x = x + h
+            x = x + TP.mlp_decode_manual(sub["mlp"],
+                                         nn.rmsnorm(sub["ln2"], x))
+            new_rk.append(rk2)
+            new_rv.append(rv2)
+        sub = jax.tree.map(lambda t: t[pat], grp)
+        h, pk, pv, sc = attn(nn.rmsnorm(sub["ln1"], x), sub["attn"], pk,
+                             pv, _scales_in(cfg, sk_l, sv_l), mrope=None)
+        x = x + h
+        x = x + TP.mlp_decode_manual(sub["mlp"], nn.rmsnorm(sub["ln2"], x))
+        return x, (jnp.stack(new_rk), jnp.stack(new_rv), pk, pv) + tuple(sc)
+
+    x, (rk, rv, pk, pv, sk2, sv2) = jax.lax.scan(
+        body, x, (stacked, ring_k, ring_v, state["pools"].k,
+                  state["pools"].v, sk, sv),
+        unroll=ng if cfg.unroll_layers else 1)
+    new_state["ring_k"] = rk.reshape((ng * pat,) + rk.shape[2:])
+    new_state["ring_v"] = rv.reshape((ng * pat,) + rv.shape[2:])
+    new_state["ring_pos"] = state["ring_pos"].at[
+        jnp.arange(B), positions % W].set(positions)
+    new_state["pools"] = paged.PagedPools(k=pk, v=pv)
+    if cfg.kv_cache_dtype == "int8":
+        new_state["pool_scales"] = paged.PoolScales(k=sk2, v=sv2)
+    return x
+
+
+def _hybrid_layers_shard(cfg, params, state, new_state, x, attn):
+    """zamba2 hybrid inside the fused manual region: the Mamba backbone runs
+    replicated (identical redundant compute on every chip — decode-time SSM
+    math carries no model-axis work), the ONE shared attention + MLP block
+    is Megatron-sharded with per-invocation paged KV."""
+    every = cfg.shared_attn_every
+    n_inv = cfg.num_layers // every
+    sp = params["shared"]
+    pk, pv = state["pools"].k, state["pools"].v
+    sk, sv = _scale_xs(cfg, state, n_inv)
+    new_ssm_chunks = []
+    pk_out, pv_out, sk_out, sv_out = [], [], [], []
+    for g in range(n_inv):
+        x, s2 = HY.mamba_decode_chunk(cfg, params["layers"], state["ssm"],
+                                      x, g * every, (g + 1) * every)
+        new_ssm_chunks.append(s2)
+        h, pk_g, pv_g, sc = attn(nn.rmsnorm(sp["ln1"], x), sp["attn"],
+                                 pk[g], pv[g],
+                                 _scales_in(cfg, sk[g], sv[g]), mrope=None)
+        x = x + h
+        x = x + TP.mlp_decode_manual(sp["mlp"], nn.rmsnorm(sp["ln2"], x))
+        pk_out.append(pk_g)
+        pv_out.append(pv_g)
+        sk_out.append(sc[0])
+        sv_out.append(sc[1])
+    rem = cfg.num_layers - n_inv * every
+    if rem:
+        x, s2 = HY.mamba_decode_chunk(cfg, params["layers"], state["ssm"],
+                                      x, n_inv * every, cfg.num_layers)
+        new_ssm_chunks.append(s2)
+    new_state["ssm"] = jax.tree.map(
+        lambda *ts: jnp.concatenate(ts, axis=0), *new_ssm_chunks)
+    new_state["pools"] = paged.PagedPools(k=jnp.stack(pk_out),
+                                          v=jnp.stack(pv_out))
+    if cfg.kv_cache_dtype == "int8":
+        new_state["pool_scales"] = paged.PoolScales(k=jnp.stack(sk_out),
+                                                    v=jnp.stack(sv_out))
+    return x
+
+
+def _page_ops(cfg, state, positions, active, *, S_max, page_size, n_chips,
+              rules):
     maxP = -(-S_max // page_size)
-    table, write_slot = PT.alloc_step(state["table"], state["seq_ids"],
-                                      positions, page_size=page_size)
+    table, write_slot, aborts = PT.alloc_step(
+        state["table"], state["seq_ids"], positions, page_size=page_size,
+        active=active)
     slots = PT.lookup_pages(table, state["seq_ids"], positions,
                             page_size=page_size, max_pages=maxP)
     B = positions.shape[0]
     cap = paged.capacity(B, maxP, n_chips,
                          factor=cfg.page_capacity_factor)
     lp_arrays = compact_op(rules, slots, BT.size(table), cap)
-    return table, write_slot, lp_arrays
+    return table, write_slot, aborts, lp_arrays
 
 
 def _scale_xs(cfg, state, n_layers):
@@ -529,11 +788,13 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
     B = tokens.shape[0]
     x = nn.embed_lookup(params["embed"], tokens)      # [B,1,d]
     new_state = dict(state)
+    act = state["active"] & ~state["aborted"]
+    aborts = jnp.zeros((B,), bool)
 
     if cfg.family in ("dense", "moe", "vlm"):
-        table, write_slot, lp = _page_ops(cfg, state, positions, S_max=S_max,
-                                          page_size=page_size,
-                                          n_chips=n_chips, rules=rules)
+        table, write_slot, aborts, lp = _page_ops(
+            cfg, state, positions, act, S_max=S_max, page_size=page_size,
+            n_chips=n_chips, rules=rules)
         new_state["table"] = table
 
         if cfg.pattern_local:
@@ -580,27 +841,12 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
         new_state["ssm"] = ssm2
 
     elif cfg.family == "hybrid":
-        table, write_slot, lp = _page_ops(cfg, state, positions, S_max=S_max,
-                                          page_size=page_size,
-                                          n_chips=n_chips, rules=rules)
+        table, write_slot, aborts, lp = _page_ops(
+            cfg, state, positions, act, S_max=S_max, page_size=page_size,
+            n_chips=n_chips, rules=rules)
         new_state["table"] = table
         every = cfg.shared_attn_every
         n_inv = cfg.num_layers // every
-
-        def mamba_chunk(x, states, lo, hi):
-            chunk_p = jax.tree.map(lambda t: t[lo:hi], params["layers"])
-            chunk_s = jax.tree.map(lambda t: t[lo:hi], states)
-
-            def body(x, xs):
-                lp_params, st = xs
-                h, st2 = ssm.mamba_decode_step(
-                    lp_params["mamba"], nn.rmsnorm(lp_params["ln"], x), cfg,
-                    st)
-                return x + h, st2
-
-            x, s2 = jax.lax.scan(body, x, (chunk_p, chunk_s),
-                                 unroll=(hi - lo) if cfg.unroll_layers else 1)
-            return x, s2
 
         new_ssm_chunks = []
         pk, pv = state["pools"].k, state["pools"].v
@@ -608,7 +854,9 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
         pk_out, pv_out, sk_out, sv_out = [], [], [], []
         sp = params["shared"]
         for g in range(n_inv):
-            x, s2 = mamba_chunk(x, state["ssm"], g * every, (g + 1) * every)
+            x, s2 = HY.mamba_decode_chunk(cfg, params["layers"],
+                                          state["ssm"], x,
+                                          g * every, (g + 1) * every)
             new_ssm_chunks.append(s2)
             h, pk_g, pv_g, sc = paged_attn_op(
                 cfg, rules, nn.rmsnorm(sp["ln1"], x), sp["attn"],
@@ -622,8 +870,9 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
             sv_out.append(sc[1])
         rem = cfg.num_layers - n_inv * every
         if rem:
-            x, s2 = mamba_chunk(x, state["ssm"], n_inv * every,
-                                cfg.num_layers)
+            x, s2 = HY.mamba_decode_chunk(cfg, params["layers"],
+                                          state["ssm"], x,
+                                          n_inv * every, cfg.num_layers)
             new_ssm_chunks.append(s2)
         new_state["ssm"] = jax.tree.map(
             lambda *ts: jnp.concatenate(ts, axis=0), *new_ssm_chunks)
@@ -634,9 +883,9 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
                 k=jnp.stack(sk_out), v=jnp.stack(sv_out))
 
     elif cfg.family == "encdec":
-        table, write_slot, lp = _page_ops(cfg, state, positions, S_max=S_max,
-                                          page_size=page_size,
-                                          n_chips=n_chips, rules=rules)
+        table, write_slot, aborts, lp = _page_ops(
+            cfg, state, positions, act, S_max=S_max, page_size=page_size,
+            n_chips=n_chips, rules=rules)
         new_state["table"] = table
 
         sk, sv = _scale_xs(cfg, state, cfg.num_layers)
@@ -669,7 +918,10 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
         logits = nn.embed_logits(params["embed"], x)
     else:
         logits = nn.dense(params["lm_head"], x)
-    new_state["pos"] = positions + 1
+    # inactive lanes stay frozen; aborted lanes refuse the token (pos not
+    # advanced, no KV written — the caller must evict or rebuild)
+    new_state["aborted"] = state["aborted"] | aborts
+    new_state["pos"] = jnp.where(act & ~aborts, positions + 1, positions)
     return logits[:, 0].astype(jnp.float32), new_state
 
 

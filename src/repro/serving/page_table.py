@@ -21,7 +21,7 @@ space from core/encoding: seq_id < 2^17 with 2^11 logical pages covers
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,18 +41,58 @@ def create_table(n_pages: int, seed: int = 0) -> BT.HashTable:
     return BT.create(n_pages, seed=seed)
 
 
+class AllocStep(NamedTuple):
+    """Result of one per-step allocation round.
+
+    ``write_slot`` is -1 for lanes that must NOT write KV this step: inactive
+    lanes (finished / padding slots) and lanes whose allocation ABORTed.  The
+    -1 sentinel is a *refusal*, not an index — every consumer masks on
+    ``write_slot >= 0`` before scattering (``paged.write_token_kv``), so an
+    abort can never wrap into physical page -1 and corrupt another
+    sequence's KV.  ``aborted`` surfaces the ABORT per lane so the engine /
+    batcher can refuse the token and trigger the Section 4.3 rebuild path
+    instead of silently serving garbage."""
+    table: BT.HashTable
+    write_slot: jnp.ndarray   # int32[B]
+    aborted: jnp.ndarray      # bool[B]
+
+
 def alloc_step(table: BT.HashTable, seq_ids, positions, *,
-               page_size: int) -> Tuple[BT.HashTable, jnp.ndarray]:
+               page_size: int, active=None) -> AllocStep:
     """Per decode step: allocate the page for each sequence's current
-    position when it crosses a page boundary.  Returns (table', write_slot
-    int32[B] — the physical page the new token's KV goes to)."""
+    position when it crosses a page boundary.
+
+    ``active`` bool[B] (default all-True) masks lanes that are live: inactive
+    lanes neither allocate (the phantom-page leak — a finished/padding lane
+    would otherwise claim a real page every ``page_size`` steps until
+    eviction) nor receive a ``write_slot``."""
+    act = (jnp.ones(positions.shape, bool) if active is None
+           else jnp.asarray(active, bool))
     page_idx = positions // page_size
-    need_new = (positions % page_size) == 0
+    need_new = ((positions % page_size) == 0) & act
     keys = page_key(seq_ids, page_idx)
-    table, _ = BT.insert_batch(table, keys, active=need_new)
+    table, ret = BT.insert_batch(table, keys, active=need_new)
+    aborted = need_new & (ret == 2)
     found, slots = BT.find_batch(table, keys)
-    # a miss here means the allocator aborted (pool exhausted) — surface -1
-    return table, jnp.where(found, slots, -1)
+    # a miss means the allocator aborted (pool exhausted) — surface -1
+    return AllocStep(table, jnp.where(found & act, slots, -1), aborted)
+
+
+def rehash(table: BT.HashTable, n_pages: int, seed: Optional[int] = None
+           ) -> Tuple[BT.HashTable, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Section 4.3 rebuild, page-table flavoured: re-insert every live key
+    into a fresh table of ``n_pages`` cells (a new seed by default).  Because
+    the cell index IS the physical page, the caller must move the KV pages
+    along with their keys: returns (table', old_slot[m], new_slot[m],
+    live[m]) — the page permutation (padded entries have live=False)."""
+    keys, n_live = BT.live_keys(table)
+    live = jnp.arange(keys.shape[0]) < n_live
+    fresh = BT.create(n_pages,
+                      seed=(int(table.seed) + 1 if seed is None else seed))
+    fresh, _ = BT.insert_batch(fresh, keys, active=live)
+    _, old_slots = BT.find_batch(table, keys, live)
+    _, new_slots = BT.find_batch(fresh, keys, live)
+    return fresh, old_slots, new_slots, live
 
 
 def lookup_pages(table: BT.HashTable, seq_ids, positions, *,

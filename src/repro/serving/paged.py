@@ -71,7 +71,12 @@ POOL_SCALE_AXES = ("layer", "pages", None, None)
 # Fused manual-TP decode layout (serve_manual_rules): pages over (pod, data)
 # only, KV *heads* over model — each model-axis chip keeps its head slice of
 # every page it owns, so attention runs end-to-end on local heads with no
-# cross-model K/V gather (serving/engine._make_manual_serve_step).
+# cross-model K/V gather (serving/engine._make_manual_serve_step).  When the
+# model axis is wider than n_kv, the pool head dim is physically TILED to
+# n_kv·rep (dist/tp.decode_kv_rep) so the same "kv" mapping divides: each
+# chip keeps exactly one (replicated) resident head, and the rep copies stay
+# bitwise identical because every owning chip writes its own copy from the
+# same replicated inputs.
 POOL_AXES_TP = ("layer", "pages", None, "kv", None)
 POOL_SCALE_AXES_TP = ("layer", "pages", None, "kv")
 
@@ -110,9 +115,14 @@ def write_token_kv(pool_k_l, pool_v_l, k_new, v_new, write_slot, positions,
     """Write one token's K/V [B, n_kv, hd] into the page each sequence's
     current position maps to (only on the owning chip).  RoPE is applied by
     the caller BEFORE the write (cache stores rotated keys).  With int8
-    pools, ``scales`` is (k_scale_l, v_scale_l) [npr, psize, kv]."""
+    pools, ``scales`` is (k_scale_l, v_scale_l) [npr, psize, kv].
+
+    ``write_slot = -1`` is the allocator's ABORT/refusal sentinel
+    (page_table.AllocStep): such lanes MUST NOT scatter — the clamp below
+    routes them to the dropped row, so a -1 can never wrap (Python-style)
+    into the last physical page and corrupt another sequence's KV."""
     mine = (write_slot >= 0) & (write_slot // npr == chip_idx)
-    rows = jnp.where(mine, write_slot % npr, npr)     # npr -> dropped
+    rows = jnp.where(mine, jnp.clip(write_slot, 0) % npr, npr)  # npr -> drop
     offs = positions % page_size
     if pool_k_l.dtype == jnp.int8:
         k_q, k_s = quantize_kv(k_new)

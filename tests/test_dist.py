@@ -176,9 +176,23 @@ def test_decode_manual_tp_gate():
     assert TP.decode_manual_tp(dense, serve_manual_rules(mesh42)) == 0
     assert TP.decode_manual_tp(man, None) == 0
     assert TP.decode_manual_tp(man, serve_manual_rules(mesh42)) == 2
-    assert TP.decode_manual_tp(man, serve_manual_rules(mesh24)) == 0  # kv 2%4
+    # kv=2 on a 4-wide model axis: REPLICATED (rep=2), no longer a fallback
+    assert TP.decode_manual_tp(man, serve_manual_rules(mesh24)) == 4
+    assert TP.decode_kv_rep(man, 4) == 2
+    assert TP.decode_kv_rep(man, 2) == 1
+    # n_q must still divide, and kv must divide or be divided by tp
+    assert TP.decode_manual_tp(
+        dataclasses.replace(man, pad_heads_to=9),
+        serve_manual_rules(mesh24)) == 0
+    assert TP.decode_kv_rep(dataclasses.replace(man, pad_kv_to=3), 4) == 0
+    assert TP.decode_manual_tp(
+        dataclasses.replace(man, pad_kv_to=3), serve_manual_rules(mesh24)) == 0
     assert TP.decode_manual_tp(
         dataclasses.replace(man, d_ff=191), serve_manual_rules(mesh42)) == 0
+    # every refusal has a loggable reason; applicability has none
+    assert TP.decode_manual_unsupported(man, serve_manual_rules(mesh42)) is None
+    assert "d_ff" in TP.decode_manual_unsupported(
+        dataclasses.replace(man, d_ff=191), serve_manual_rules(mesh42))
     # tp == 1 still takes the fused path (single-device CPU coverage)
     assert TP.decode_manual_tp(man, serve_manual_rules(_mesh_1x1())) == 1
     # MoE gates on expert divisibility instead of d_ff

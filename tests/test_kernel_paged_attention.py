@@ -73,11 +73,38 @@ def test_head_shard_slices_match_full(n_shards):
     np.testing.assert_array_equal(np.concatenate(parts, axis=1), full)
 
 
+def test_head_shard_replicated_kv_slices_match_full():
+    """KV replication (n_shards wider than KH, kv_rep = n_shards/KH): each
+    shard keeps ONE replicated KV head and a disjoint q-head slice of that
+    head's group — concatenating the per-shard kernel outputs still equals
+    the full kernel exactly (the kv=8-on-16-wide production layout)."""
+    rng = np.random.default_rng(9)
+    B, QH, KH, D, NP, PS, MP = 2, 8, 2, 32, 16, 8, 4
+    n_shards, kv_rep = 4, 2                 # 4 chips, 2 kv heads -> rep 2
+    q, k, v, ids, lens = make_case(rng, B, QH, KH, D, NP, PS, MP,
+                                   jnp.float32)
+    full = np.asarray(paged_attention(q, k, v, ids, lens, interpret=True))
+    parts = []
+    for s in range(n_shards):
+        qs, ks, vs = shard_heads(q, k, v, s, n_shards, kv_rep=kv_rep)
+        assert ks.shape[2] == 1             # one resident head per chip
+        parts.append(np.asarray(
+            paged_attention(qs, ks, vs, ids, lens, interpret=True)))
+    # splitting a GQA group changes the kernel's f32 reduction shapes, so
+    # (unlike the rep=1 slicing) equality holds to fp ulp, not bitwise
+    np.testing.assert_allclose(np.concatenate(parts, axis=1), full,
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_head_shard_rejects_indivisible():
     rng = np.random.default_rng(8)
     q, k, v, _, _ = make_case(rng, 1, 6, 2, 16, 8, 4, 2, jnp.float32)
     with pytest.raises(ValueError):
         shard_heads(q, k, v, 0, 4)
+    # replication factor must exactly cover the shard count
+    q, k, v, _, _ = make_case(rng, 1, 8, 2, 16, 8, 4, 2, jnp.float32)
+    with pytest.raises(ValueError):
+        shard_heads(q, k, v, 0, 8, kv_rep=2)   # 2*2 != 8
 
 
 def test_shared_pages_prefix_cache():

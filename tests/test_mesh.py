@@ -187,9 +187,16 @@ print("manual TP == baseline OK")
 
 def test_manual_decode_matches_gspmd():
     """The fused manual-TP decode step (one shard_map over all axes,
-    head-sharded KV pools) matches the GSPMD decode path token-for-token on
-    an 8-device mesh — dense (pod/data/model), MoE (expert-parallel), and
-    int8-KV variants."""
+    head-sharded KV pools) matches the GSPMD decode path on an 8-device
+    mesh — dense (pod/data/model), MoE (expert-parallel), int8-KV,
+    non-divisible GQA (kv=2 on a 4-wide model axis -> KV replication),
+    gemma3 local-window ring layers, and the zamba2 hybrid family.
+
+    The MoE router carries a deterministic snap+index tie-break
+    (moe._router_top_k), so impls on the same mesh can no longer flip
+    experts on bf16 near-ties — the old top-2-gap-aware token allowance
+    (0.12-wide, sized for whole-expert flips) is gone; parity is the plain
+    allclose at fp-noise tolerance for every family."""
     run_with_devices(COMMON + """
 import dataclasses
 from repro.configs import get_smoke_config
@@ -201,6 +208,12 @@ CASES = [
     ("qwen2.5-32b", (2, 2, 2), ("pod", "data", "model"), {}),
     ("granite-moe-1b-a400m", (4, 2), ("data", "model"), {}),
     ("qwen2.5-32b", (4, 2), ("data", "model"), {"kv_cache_dtype": "int8"}),
+    # kv=2 on tp=4: the KV-replication path (rep=2), previously a fallback
+    ("qwen2.5-32b", (2, 4), ("data", "model"), {}),
+    # local-window ring layers inside the fused region
+    ("gemma3-12b", (2, 2, 2), ("pod", "data", "model"), {}),
+    # hybrid: mamba backbone replicated + shared attn block sharded
+    ("zamba2-1.2b", (4, 2), ("data", "model"), {}),
 ]
 for arch, shape, axes, over in CASES:
     cfg = dataclasses.replace(get_smoke_config(arch), **over)
@@ -226,19 +239,12 @@ for arch, shape, axes, over in CASES:
     assert EG._manual_decode_ok(man_cfg, man_rules), (arch, "gate refused")
     gspmd = run(cfg, serve_rules(mesh))
     manual = run(man_cfg, man_rules)
-    np.testing.assert_allclose(manual, gspmd, atol=6e-2, rtol=1e-2,
+    np.testing.assert_allclose(manual, gspmd, atol=5e-2, rtol=1e-2,
                                err_msg=arch)
-    # greedy tokens agree everywhere the top-2 gap exceeds fp noise
-    am, ag = manual.argmax(-1), gspmd.argmax(-1)
-    mism = am != ag
-    if mism.any():
-        srt = np.sort(gspmd, axis=-1)
-        gap = srt[..., -1] - srt[..., -2]
-        assert (gap[mism] < 0.12).all(), (arch, gap[mism].max())
     if cfg.family == "dense" and not over:
         ref = run(cfg, None)
-        np.testing.assert_allclose(manual, ref, atol=6e-2, rtol=1e-2)
-    print(arch, over, "manual == gspmd OK, maxerr",
+        np.testing.assert_allclose(manual, ref, atol=5e-2, rtol=1e-2)
+    print(arch, shape, over, "manual == gspmd OK, maxerr",
           float(np.abs(manual - gspmd).max()))
 print("fused manual decode == gspmd OK")
 """)

@@ -74,7 +74,8 @@ def _mesh_1x1():
 
 
 @pytest.mark.parametrize("arch", ["qwen2.5-32b", "granite-moe-1b-a400m",
-                                  "qwen2-vl-7b"])
+                                  "qwen2-vl-7b", "gemma3-12b",
+                                  "zamba2-1.2b"])
 def test_manual_decode_single_device_matches_reference(arch):
     """``tp_impl="manual"`` on a 1-wide model axis routes through the fused
     manual shard_map region (decode_manual_tp deliberately allows tp == 1)
@@ -106,19 +107,30 @@ def test_manual_decode_single_device_matches_reference(arch):
     np.testing.assert_allclose(run(rules), run(None), atol=5e-2, rtol=1e-2)
 
 
-def test_manual_decode_falls_back_when_inapplicable():
-    """Families without a paged dense stack (and non-divisible head counts)
-    must quietly take the gspmd path — same step function semantics."""
+def test_manual_decode_gate_and_fallback_reasons():
+    """After the universal fused decode, only genuinely unsupported shapes
+    fall back (ssm: attention-free; encdec: cross-attn state) — and every
+    fallback carries a loggable reason, never a silent swallow.  gemma3
+    (local-window) and zamba2 (hybrid) now PASS the gate."""
     rules = serve_manual_rules(_mesh_1x1())
     gemma = dataclasses.replace(get_smoke_config("gemma3-12b"),
                                 tp_impl="manual")
-    assert gemma.pattern_local and not EG._manual_decode_ok(gemma, rules)
+    assert gemma.pattern_local and EG._manual_decode_ok(gemma, rules)
+    hybrid = dataclasses.replace(get_smoke_config("zamba2-1.2b"),
+                                 tp_impl="manual")
+    assert EG._manual_decode_ok(hybrid, rules)
     ssm = dataclasses.replace(get_smoke_config("mamba2-2.7b"),
                               tp_impl="manual")
     assert not EG._manual_decode_ok(ssm, rules)
+    assert "SSM" in EG._manual_decode_reason(ssm, rules)
+    encdec = dataclasses.replace(get_smoke_config("seamless-m4t-large-v2"),
+                                 tp_impl="manual")
+    assert not EG._manual_decode_ok(encdec, rules)
+    assert "cross-attention" in EG._manual_decode_reason(encdec, rules)
     # gspmd impl never takes the fused path
     dense = get_smoke_config("qwen2.5-32b")
     assert not EG._manual_decode_ok(dense, rules)
+    assert "manual" in EG._manual_decode_reason(dense, rules)
 
 
 def test_page_allocator_tombstone_reuse():
@@ -139,8 +151,10 @@ def test_page_allocator_tombstone_reuse():
             next_id += 1
         seq = jnp.asarray(sorted(active), jnp.int32)
         pos = jnp.asarray([active[int(s)] for s in seq], jnp.int32)
-        table, slots = PT.alloc_step(table, seq, pos, page_size=page_size)
+        table, slots, aborted = PT.alloc_step(table, seq, pos,
+                                              page_size=page_size)
         assert (np.asarray(slots) >= 0).all(), "allocator aborted"
+        assert not np.asarray(aborted).any()
         for s in np.asarray(seq):
             active[int(s)] += 1
         # evict sequences that got long
@@ -163,8 +177,9 @@ def test_lookup_pages_consistency():
     table = PT.create_table(32)
     seq = jnp.arange(3, dtype=jnp.int32)
     for pos in range(10):
-        table, ws = PT.alloc_step(table, seq, jnp.full((3,), pos, jnp.int32),
-                                  page_size=4)
+        table, ws, _ = PT.alloc_step(table, seq,
+                                     jnp.full((3,), pos, jnp.int32),
+                                     page_size=4)
     slots = PT.lookup_pages(table, seq, jnp.full((3,), 9, jnp.int32),
                             page_size=4, max_pages=8)
     s = np.asarray(slots)
@@ -184,8 +199,9 @@ def test_alloc_monotone_pages(psize, steps, B):
     table = PT.create_table(n_pages)
     seq = jnp.arange(B, dtype=jnp.int32)
     for pos in range(steps):
-        table, _ = PT.alloc_step(table, seq, jnp.full((B,), pos, jnp.int32),
-                                 page_size=psize)
+        table, _, _ = PT.alloc_step(table, seq,
+                                    jnp.full((B,), pos, jnp.int32),
+                                    page_size=psize)
     expect = -(-steps // psize)
     assert int(table.num_keys) == B * expect
     slots = PT.lookup_pages(table, seq, jnp.full((B,), steps - 1, jnp.int32),
@@ -194,6 +210,126 @@ def test_alloc_monotone_pages(psize, steps, B):
     live = s[s >= 0]
     assert len(live) == B * expect
     assert len(set(live.tolist())) == len(live)
+
+
+def test_page_pool_exhaustion_lifecycle():
+    """Adversarial allocator lifecycle, under jit: fill the pool to
+    exhaustion — the ABORT must be *surfaced* (aborted flag, write_slot
+    refused as -1, never wrapped into a valid page) — then evict half the
+    sequences and verify the very next alloc_steps re-claim the tombstoned
+    slots (Proposition 2 operating as the allocator), with write_slot >= 0
+    throughout the reclaim."""
+    import functools
+    n_pages, B, page_size = 16, 4, 2
+    step = jax.jit(functools.partial(PT.alloc_step, page_size=page_size))
+    table = PT.create_table(n_pages)
+    seq = jnp.arange(B, dtype=jnp.int32)
+    steps_to_fill = (n_pages // B) * page_size          # 8 -> pool full
+    for pos in range(steps_to_fill):
+        table, ws, ab = step(table, seq, jnp.full((B,), pos, jnp.int32))
+        assert (np.asarray(ws) >= 0).all() and not np.asarray(ab).any()
+    assert int(table.num_keys) == n_pages               # every cell live
+    # the next boundary must ABORT on every lane — reported, not wrapped
+    table, ws, ab = step(table, seq,
+                         jnp.full((B,), steps_to_fill, jnp.int32))
+    assert np.asarray(ab).all(), "abort not surfaced"
+    assert (np.asarray(ws) == -1).all(), "wrapped write_slot"
+    # evict half -> tombstones; freed slots are re-claimable IMMEDIATELY
+    freed = np.asarray(PT.lookup_pages(
+        table, seq[:2], jnp.full((2,), steps_to_fill - 1, jnp.int32),
+        page_size=page_size, max_pages=n_pages))
+    table = PT.free_sequences(table, seq[:2],
+                              jnp.full((2,), steps_to_fill, jnp.int32),
+                              page_size=page_size, max_pages=n_pages)
+    assert int(table.num_tombs) == n_pages // 2
+    fresh = jnp.arange(B, B + 2, dtype=jnp.int32)
+    for pos in range(steps_to_fill):
+        table, ws, ab = step(table, fresh, jnp.full((2,), pos, jnp.int32))
+        assert (np.asarray(ws) >= 0).all(), "reclaim failed"
+        assert not np.asarray(ab).any()
+        if pos % page_size == 0:
+            assert set(np.asarray(ws).tolist()) <= set(
+                freed[freed >= 0].tolist()), "did not reuse tombstones"
+    assert int(table.num_tombs) == 0                    # all reclaimed
+
+
+def test_engine_abort_refusal_and_rebuild():
+    """End-to-end §4.3: exhaust the pool (sequences re-admitted without
+    eviction — the scenario page slack cannot absorb), verify the engine
+    latches ``aborted`` and refuses the token (pos frozen, no silent
+    wrap/drop), then ``rebuild_page_table`` into a larger pool (table
+    re-hashed AND physical pages moved to the keys' new slots) and the
+    retried step must match a big-pool reference run bit-for-nearly."""
+    cfg = get_smoke_config("qwen2.5-32b")
+    model = get_model(cfg)
+    params, _ = model.init(cfg, jax.random.PRNGKey(0))
+    B, page_size = 2, 4                                  # maxP = 2
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 16), 0,
+                                cfg.vocab_size)
+    step = jax.jit(EG.make_serve_step(cfg, S_max=8, page_size=page_size))
+    state, _ = EG.make_decode_state(cfg, B, S_max=8, page_size=page_size)
+    n_pages = state["pools"].k.shape[1]                  # 6
+    # big-pool reference with IDENTICAL maxP: rebuild (on a healthy state)
+    # into 4x the pages — also covers rebuild without any abort
+    ref_state = EG.rebuild_page_table(dict(state), n_pages=n_pages * 4)
+
+    def both(t):
+        nonlocal state, ref_state
+        pos = jnp.full((B,), t, jnp.int32)
+        lg, state = step(params, state, tokens[:, t:t + 1], pos)
+        rlg, ref_state = step(params, ref_state, tokens[:, t:t + 1], pos)
+        return np.asarray(lg), np.asarray(rlg)
+
+    for t in range(8):                                   # 4 of 6 pages
+        lg, rlg = both(t)
+        np.testing.assert_allclose(lg, rlg, atol=2e-4, rtol=1e-4)
+    assert not np.asarray(state["aborted"]).any()
+    # re-admit both slots WITHOUT evicting (stale pages stay live)
+    for s in (state, ref_state):
+        s["seq_ids"] = s["seq_ids"] + B
+        s["pos"] = jnp.zeros((B,), jnp.int32)
+    lg, rlg = both(0)                                    # 6 of 6 pages
+    np.testing.assert_allclose(lg, rlg, atol=2e-4, rtol=1e-4)
+    for t in range(1, 4):
+        lg, rlg = both(t)
+    # t=4 page boundary: the small pool is full -> ABORT, token refused
+    lg, rlg = both(4)
+    assert np.asarray(state["aborted"]).all(), "abort not surfaced"
+    assert (np.asarray(state["pos"]) == 4).all(), "token not refused"
+    assert (np.asarray(ref_state["pos"]) == 5).all()
+    # §4.3 rebuild: 2x pool, pages follow their keys; flags cleared
+    state = EG.rebuild_page_table(state, n_pages=n_pages * 2)
+    assert not np.asarray(state["aborted"]).any()
+    assert state["pools"].k.shape[1] == n_pages * 2
+    # retry the refused token against the reference's stored step, then
+    # decode on in lockstep
+    pos = jnp.full((B,), 4, jnp.int32)
+    lg2, state = step(params, state, tokens[:, 4:5], pos)
+    np.testing.assert_allclose(np.asarray(lg2), rlg, atol=2e-4, rtol=1e-4)
+    assert (np.asarray(state["pos"]) == 5).all()
+    for t in range(5, 7):
+        lg, rlg = both(t)
+        np.testing.assert_allclose(lg, rlg, atol=2e-4, rtol=1e-4)
+
+
+def test_inactive_lanes_leak_no_pages():
+    """Phantom-page fix: a finished (inactive) lane must stop allocating
+    pages and its pos must freeze, while live lanes decode on."""
+    cfg = get_smoke_config("qwen2.5-32b")
+    model = get_model(cfg)
+    params, _ = model.init(cfg, jax.random.PRNGKey(0))
+    B, page_size = 4, 2
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 12), 0,
+                                cfg.vocab_size)
+    step = jax.jit(EG.make_serve_step(cfg, S_max=32, page_size=page_size))
+    state, _ = EG.make_decode_state(cfg, B, S_max=32, page_size=page_size)
+    state["active"] = jnp.asarray([True, True, False, False])
+    for t in range(8):
+        pos = state["pos"]
+        _, state = step(params, state, tokens[:, t:t + 1], pos)
+    assert (np.asarray(state["pos"]) == [8, 8, 0, 0]).all()
+    # only the two live lanes own pages: 8 steps @ page_size 2 -> 4 each
+    assert int(state["table"].num_keys) == 2 * 4
 
 
 def test_decode_state_after_eviction_reuse():
