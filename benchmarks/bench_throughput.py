@@ -1,7 +1,13 @@
 """Batched-table throughput (jit, CPU host): Mops/s for insert / lookup /
 delete / mixed at several load factors, ours vs the no-reuse baseline.
 CPU numbers are for relative comparison (the TPU path is the probe kernel,
-validated in interpret mode; see bench_kernels)."""
+validated in interpret mode; see bench_kernels).
+
+Also the decode hot path: megastep tokens/s at K in {1, 4, 16} (wall-clock,
+report-only) and the machine-independent ``probes_per_token`` counter —
+keys probed per decode token by the incremental block-table cache vs the
+full O(B·max_pages) re-probe it replaced (deterministic counts, gated in
+check_regression)."""
 from __future__ import annotations
 
 import time
@@ -22,6 +28,79 @@ def _time(fn, *args, iters: int = 5):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters
+
+
+def probes_per_token(B: int = 8, max_pages: int = 64, page_size: int = 4,
+                     tokens: int = 16) -> dict:
+    """Machine-independent probe accounting: replay ``tokens`` decode steps
+    on the page-table layer alone (eager, so the PT.PROBE_STATS counter
+    sees concrete counts) under (a) the old full re-probe — ``alloc_step``
+    + ``lookup_pages`` per token — and (b) the incremental block-table
+    cache — ``alloc_step_incremental`` only.  The counts are exact and
+    deterministic, so both rates and their ratio are gated."""
+    from repro.serving import page_table as PT
+    n_pages = B * max_pages
+    seq = jnp.arange(B, dtype=jnp.int32)
+
+    PT.probe_stats_reset()
+    table = PT.create_table(n_pages)
+    for pos in range(tokens):
+        p = jnp.full((B,), pos, jnp.int32)
+        table, _, _ = PT.alloc_step(table, seq, p, page_size=page_size)
+        PT.lookup_pages(table, seq, p, page_size=page_size,
+                        max_pages=max_pages)
+    full = PT.PROBE_STATS["keys_probed"] / tokens
+
+    PT.probe_stats_reset()
+    table = PT.create_table(n_pages)
+    bt = jnp.full((B, max_pages), -1, jnp.int32)
+    for pos in range(tokens):
+        p = jnp.full((B,), pos, jnp.int32)
+        (table, ws, ab), bt = PT.alloc_step_incremental(
+            table, seq, p, bt, page_size=page_size)
+        assert not bool(jnp.any(ab)) and bool(jnp.all(ws >= 0))
+    incr = PT.PROBE_STATS["keys_probed"] / tokens
+    assert int(PT.verify_block_table(table, seq,
+                                     jnp.full((B,), tokens - 1, jnp.int32),
+                                     bt, page_size=page_size)) == 0
+    PT.probe_stats_reset()
+    return {"probes_per_token_full": full,
+            "probes_per_token_incremental": incr,
+            "probe_reduction_x": full / max(incr, 1e-9)}
+
+
+def decode_tok_s(fast: bool) -> dict:
+    """Decode megastep wall-clock tokens/s at K in {1, 4, 16} (smoke model,
+    CPU — report-only like every wall-clock metric)."""
+    from repro.configs import get_smoke_config
+    from repro.models.registry import get_model
+    from repro.serving import engine as EG
+
+    cfg = get_smoke_config("qwen2.5-32b")
+    model = get_model(cfg)
+    params, _ = model.init(cfg, jax.random.PRNGKey(0))
+    # S_max must cover warm-up + every timed token (K=16: 16 + 5*16 = 96),
+    # or the timed lanes run past the pool, ABORT, and freeze — wall-clock
+    # over frozen lanes is not throughput
+    B, S_max, psize = 4, 128, 4
+    out = {}
+    for K in (1, 4, 16):
+        state, _ = EG.make_decode_state(cfg, B, S_max=S_max, page_size=psize)
+        mega = jax.jit(EG.make_serve_megastep(cfg, S_max=S_max, K=K,
+                                              page_size=psize))
+        tok = jnp.zeros((B, 1), jnp.int32)
+        toks, state = mega(params, state, tok)      # compile + warm
+        jax.block_until_ready(toks)
+        iters = 2 if fast else 5
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            toks, state = mega(params, state, toks[:, -1:])
+        jax.block_until_ready(toks)
+        dt = (time.perf_counter() - t0) / iters
+        assert not bool(jnp.any(state["aborted"])), \
+            "pool exhausted mid-benchmark: tok/s would count frozen lanes"
+        out[f"tok_s_K{K}"] = B * K / dt
+    return out
 
 
 def run(verbose: bool = True, fast: bool = False) -> dict:
@@ -53,10 +132,18 @@ def run(verbose: bool = True, fast: bool = False) -> dict:
                      "lookup_hit_Mops": B / t_hit / 1e6,
                      "lookup_miss_Mops": B / t_miss / 1e6,
                      "mixed_Mops": B / t_mixed / 1e6})
+    probes = probes_per_token()
+    decode = decode_tok_s(fast)
     if verbose:
         print(f"bench_throughput (jit CPU, m={m}, batch={B})")
         print("   load   lookup-hit   lookup-miss   mixed  [Mops/s]")
         for r in rows:
             print(f"  {r['load']:5.2f}   {r['lookup_hit_Mops']:9.2f}   "
                   f"{r['lookup_miss_Mops']:10.2f}   {r['mixed_Mops']:6.2f}")
-    return {"rows": rows}
+        print(f"  decode probes/token: full={probes['probes_per_token_full']:.1f} "
+              f"incremental={probes['probes_per_token_incremental']:.1f} "
+              f"({probes['probe_reduction_x']:.0f}x fewer)")
+        print("  decode megastep tok/s: "
+              + "  ".join(f"K{k.split('_K')[1]}={v:.1f}"
+                          for k, v in decode.items()))
+    return {"rows": rows, "decode": {**probes, **decode}}

@@ -26,8 +26,11 @@ import math
 import sys
 
 # report-only: wall-clock throughput (runner-dependent) and fp comparison
-# residuals (BLAS/ISA-dependent; correctness is gated by the pytest suite)
-NOISY_MARKERS = ("Mops", "max_err")
+# residuals (BLAS/ISA-dependent; correctness is gated by the pytest suite).
+# "tok_s": decode megastep tokens/s — wall-clock like Mops.  The decode
+# probes_per_token_* / probe_reduction_x counts are deterministic replays
+# and stay GATED.
+NOISY_MARKERS = ("Mops", "max_err", "tok_s")
 
 
 def flatten(tree, prefix="", out=None):

@@ -30,8 +30,10 @@ err = float(jnp.max(jnp.abs(logits - ref[:, -1].astype(jnp.float32))))
 print(f"   last-token logits err vs forward: {err:.2e}")
 assert err < 6e-2
 
-print("[example] continuous batching under churn (tombstone reuse)")
-srv = ContinuousBatcher(cfg, params, batch=4, max_len=48, page_size=8)
+print("[example] continuous batching under churn (tombstone reuse), "
+      "megastep K=4: one dispatch per 4 greedy tokens")
+srv = ContinuousBatcher(cfg, params, batch=4, max_len=48, page_size=8,
+                        megastep_k=4)
 for r in range(6):
     srv.decode_round(8)
     st = srv.table_stats()

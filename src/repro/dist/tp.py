@@ -200,6 +200,19 @@ def decode_manual_tp(cfg, rules) -> int:
     return rules.mesh.shape["model"]
 
 
+def decode_megastep_mode(cfg, rules, K: int) -> str:
+    """Bookkeeping tag for the decode megastep (``serving/engine.
+    make_serve_megastep``), recorded in dry-run artifacts next to
+    ``decode_tp``: ``"scan-K{K}"`` when the K-token ``lax.scan`` dispatch
+    applies (every family — the scan wraps whichever per-token body the
+    gate above selects), ``"per-token"`` for K <= 1.  Dry-run's
+    ``--expect-fused`` fails the build if an expected arch's decode cell
+    records anything but a ``scan-`` tag — a regression back to per-token
+    host dispatch can never land silently."""
+    del cfg, rules  # the scan dispatch is family/mesh-independent today
+    return f"scan-K{K}" if K > 1 else "per-token"
+
+
 def decode_param_specs(cfg, params, *, vocab_sharded: bool,
                        kv_rep: int = 1):
     """shard_map in_specs (prefix pytree) for the fused manual decode region:

@@ -13,6 +13,31 @@ from repro.kernels.probe.probe import (DEFAULT_KT, DEFAULT_TB,
                                        probe_lookup_kernel)
 
 
+def _sorted_tiles(ht: BT.HashTable, keys, *, TB: int, KT: int):
+    """Sort keys by hash, pad to a whole number of KT-key tiles, and compute
+    each tile's starting table block.  Returns (keys_s, hv_s, bstart, inv)
+    where ``inv`` is the inverse permutation back to input order — an O(n)
+    scatter (``zeros.at[order].set(iota)``), not a second O(n log n)
+    argsort: ``order`` is already the permutation, inverting it is one
+    scatter of iota."""
+    B = keys.shape[0]
+    hv = BT._hash(ht, keys).astype(jnp.int32)
+    order = jnp.argsort(hv)
+    inv = jnp.zeros((B,), jnp.int32).at[order].set(
+        jnp.arange(B, dtype=jnp.int32))
+    keys_s = keys[order]
+    hv_s = hv[order]
+
+    nt = -(-B // KT)  # ceil
+    pad = nt * KT - B
+    if pad:
+        keys_s = jnp.concatenate([keys_s,
+                                  jnp.broadcast_to(keys_s[-1:], (pad,))])
+        hv_s = jnp.concatenate([hv_s, jnp.broadcast_to(hv_s[-1:], (pad,))])
+    bstart = (hv_s[::KT] // TB).astype(jnp.int32)
+    return keys_s, hv_s, bstart, inv
+
+
 @functools.partial(jax.jit, static_argnames=("TB", "KT", "interpret",
                                              "use_kernel"))
 def probe_lookup(ht: BT.HashTable, keys, *, TB: int = DEFAULT_TB,
@@ -29,18 +54,7 @@ def probe_lookup(ht: BT.HashTable, keys, *, TB: int = DEFAULT_TB,
     if not use_kernel or m % TB != 0 or m // TB < 2:
         return BT.find_batch(ht, keys)
 
-    hv = BT._hash(ht, keys).astype(jnp.int32)
-    order = jnp.argsort(hv)
-    inv = jnp.argsort(order)
-    keys_s = keys[order]
-    hv_s = hv[order]
-
-    nt = -(-B // KT)  # ceil
-    pad = nt * KT - B
-    if pad:
-        keys_s = jnp.concatenate([keys_s, jnp.broadcast_to(keys_s[-1:], (pad,))])
-        hv_s = jnp.concatenate([hv_s, jnp.broadcast_to(hv_s[-1:], (pad,))])
-    bstart = (hv_s[::KT] // TB).astype(jnp.int32)
+    keys_s, hv_s, bstart, inv = _sorted_tiles(ht, keys, TB=TB, KT=KT)
 
     found_k, slot_k, resolved_k = probe_lookup_kernel(
         ht.table, keys_s, hv_s, bstart, TB=TB, KT=KT, interpret=interpret)
@@ -59,20 +73,13 @@ def probe_lookup(ht: BT.HashTable, keys, *, TB: int = DEFAULT_TB,
 def resolved_fraction(ht: BT.HashTable, keys, **kw):
     """Diagnostic: fraction of keys served by the kernel fast path."""
     keys = jnp.asarray(keys, jnp.uint32)
-    m = BT.size(ht)
+    B = keys.shape[0]
     TB = kw.get("TB", DEFAULT_TB)
     KT = kw.get("KT", DEFAULT_KT)
-    hv = BT._hash(ht, keys).astype(jnp.int32)
-    order = jnp.argsort(hv)
-    keys_s, hv_s = keys[order], hv[order]
-    B = keys.shape[0]
-    nt = -(-B // KT)
-    pad = nt * KT - B
-    if pad:
-        keys_s = jnp.concatenate([keys_s, jnp.broadcast_to(keys_s[-1:], (pad,))])
-        hv_s = jnp.concatenate([hv_s, jnp.broadcast_to(hv_s[-1:], (pad,))])
-    bstart = (hv_s[::KT] // TB).astype(jnp.int32)
+    keys_s, hv_s, bstart, _ = _sorted_tiles(ht, keys, TB=TB, KT=KT)
     _, _, resolved = probe_lookup_kernel(ht.table, keys_s, hv_s, bstart,
                                          TB=TB, KT=KT,
                                          interpret=kw.get("interpret", False))
+    # the first B sorted entries are exactly the B real keys (pads sit at
+    # the tail); the mean is permutation-invariant
     return resolved[:B].mean()

@@ -32,6 +32,10 @@ from repro.models.registry import get_model
 from repro.serving import engine as EG
 from repro.training import train_step as TS
 
+# K of the decode-megastep lowering recorded in dry-run artifacts (one scan
+# body compile — production K is a serving knob, not a lowering property)
+MEGASTEP_K = 4
+
 BATCH_LOGICAL = {
     "tokens": ("batch", "seq"),
     "labels": ("batch", "seq"),
@@ -134,24 +138,22 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
         state_sds, state_axes = EG.make_decode_state(
             cfg, B, S_max=shape.seq_len, rules=rules, abstract=True)
         state_sh = _shardings(rules, state_axes, state_sds)
-        serve = EG.make_serve_step(cfg, S_max=shape.seq_len, rules=rules)
-        tok_sh = NamedSharding(mesh, P())
+        # decode cells lower the K-token MEGASTEP (it contains the per-token
+        # serve body, so the old single-step gate is subsumed): in-graph
+        # greedy sampling, positions from state["pos"], vlm mrope derived
+        # in-graph.  The artifact records the megastep tag so a regression
+        # back to per-token host dispatch fails --expect-fused.
+        serve = EG.make_serve_megastep(cfg, S_max=shape.seq_len,
+                                       K=MEGASTEP_K, rules=rules)
+        megastep_tag = getattr(serve, "megastep", "per-token")
 
-        if cfg.family == "vlm":
-            def serve_step(params, state, tokens, positions, mrope):
-                return serve(params, state, tokens, positions, mrope)
-            in_sh = (params_sh, state_sh, tok_sh, tok_sh, tok_sh)
-            args = (params_sds, state_sds, specs["tokens"],
-                    specs["positions"], specs["mrope_positions"])
-        else:
-            def serve_step(params, state, tokens, positions):
-                return serve(params, state, tokens, positions)
-            in_sh = (params_sh, state_sh, tok_sh, tok_sh)
-            args = (params_sds, state_sds, specs["tokens"],
-                    specs["positions"])
-        jitted = jax.jit(serve_step, in_shardings=in_sh,
+        def serve_step(params, state, tokens):
+            return serve(params, state, tokens)
+        tok_sh = NamedSharding(mesh, P())
+        jitted = jax.jit(serve_step,
+                         in_shardings=(params_sh, state_sh, tok_sh),
                          donate_argnums=(1,))
-        lowered = jitted.lower(*args)
+        lowered = jitted.lower(params_sds, state_sds, specs["tokens"])
 
     compiled = lowered.compile()
     meta = {"arch": arch_id, "shape": shape_name,
@@ -161,6 +163,7 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
         # which TP path the cell actually lowered — artifacts must prove
         # the fused region applied, never a quiet fallback (--expect-fused)
         meta["decode_tp"] = "manual-fused" if fused else "gspmd"
+        meta["megastep"] = megastep_tag
     return cfg, shape, lowered, compiled, meta
 
 
@@ -205,6 +208,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str,
                    roofline=rl.to_dict())
         if "decode_tp" in meta:
             rec["decode_tp"] = meta["decode_tp"]
+            rec["megastep"] = meta["megastep"]
         if verbose:
             print(f"[{tag}] compiled in {t_compile:.0f}s  "
                   f"flops/chip={rl.hlo_flops_per_chip:.3e}  "
@@ -284,6 +288,10 @@ def main():
             seen.add(r["arch"])
             if r.get("decode_tp") != "manual-fused":
                 not_fused.append(f"{r['arch']}/{r['shape']}/{r['mesh']}")
+            elif not str(r.get("megastep", "")).startswith("scan-"):
+                # the K-token scan dispatch silently degraded to per-token
+                not_fused.append(f"{r['arch']}/{r['shape']}/{r['mesh']}"
+                                 f" (megastep={r.get('megastep')})")
         # an expected arch with NO ok decode cell (typo / rename / all
         # skipped) must fail too, or the gate is silently vacuous
         for arch in sorted(expect - seen):

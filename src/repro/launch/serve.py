@@ -6,9 +6,20 @@ become tombstones), and new sequences immediately RECLAIM those page slots
 (tombstone reuse — Proposition 2 as a memory allocator).  The pool never
 needs compaction; occupancy stays bounded by live pages.
 
+The decode loop is driven in MEGASTEPS (``engine.make_serve_megastep``):
+one jitted dispatch produces K greedy tokens (sampling in-graph), so the
+host syncs once per K tokens instead of once per token.  Done lanes latch
+``active=False`` in-graph via ``stop_len``; a lane whose page allocation
+ABORTs freezes (pos + pending token) and, after the Section 4.3 rebuild,
+the next megastep re-issues the refused suffix automatically — the refused
+token is still the lane's pending feed.  Eviction/re-admission is one
+vectorized host pass per megastep; evicted lanes' block-table rows are
+invalidated and re-admitted rows rebuilt from the authoritative wait-free
+lookup (the incremental cache never survives a seq-id change).
+
 Usage (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b --smoke \
-      --rounds 6 --batch 4 --max-len 48
+      --rounds 6 --batch 4 --max-len 48 --megastep 4
 """
 from __future__ import annotations
 
@@ -27,18 +38,22 @@ from repro.serving import page_table as PT
 class ContinuousBatcher:
     """Slot-based continuous batching: B decode slots; finished sequences
     are evicted (pages freed) and their slot re-admitted with a fresh
-    sequence id."""
+    sequence id.  ``megastep_k`` tokens are decoded per dispatch;
+    ``verify_block_table=True`` (CI-only) checks the incremental
+    block-table cache against the wait-free lookup after every megastep."""
 
     def __init__(self, cfg, params, *, batch: int, max_len: int,
-                 page_size: int, rules=None, seed: int = 0):
+                 page_size: int, rules=None, seed: int = 0,
+                 megastep_k: int = 1, verify_block_table: bool = False):
         self.cfg, self.params = cfg, params
         self.B, self.max_len, self.page_size = batch, max_len, page_size
+        self.K = max(1, int(megastep_k))
+        self.verify = verify_block_table
         self.state, _ = EG.make_decode_state(cfg, batch, S_max=max_len,
                                              rules=rules,
                                              page_size=page_size)
-        self.step_fn = jax.jit(EG.make_serve_step(cfg, S_max=max_len,
-                                                  rules=rules,
-                                                  page_size=page_size))
+        self.mega_fn = jax.jit(EG.make_serve_megastep(
+            cfg, S_max=max_len, K=self.K, rules=rules, page_size=page_size))
         self.pos = np.zeros(batch, np.int32)
         self.lengths = np.random.default_rng(seed).integers(
             max_len // 3, max_len - 1, size=batch)
@@ -48,59 +63,71 @@ class ContinuousBatcher:
         self.rebuilds = 0
         self.tokens = jnp.zeros((batch, 1), jnp.int32)
 
+    def _check_block_table(self):
+        mism = int(PT.verify_block_table(
+            self.state["table"], self.state["seq_ids"],
+            jnp.asarray(self.pos), self.state["block_table"],
+            page_size=self.page_size))
+        if mism:
+            raise RuntimeError(
+                f"block-table cache diverged from the wait-free lookup "
+                f"({mism} entries) — invalidation/update invariant broken")
+
     def decode_round(self, steps: int):
         maxP = -(-self.max_len // self.page_size)
-        for _ in range(steps):
-            positions = jnp.asarray(self.pos)
-            if self.cfg.family == "vlm":
-                mr = jnp.broadcast_to(positions[None, :, None],
-                                      (3, self.B, 1)).astype(jnp.int32)
-                logits, self.state = self.step_fn(
-                    self.params, self.state, self.tokens, positions, mr)
-            else:
-                logits, self.state = self.step_fn(
-                    self.params, self.state, self.tokens, positions)
-            prev_tokens = self.tokens
-            self.tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            # the engine is the source of truth: aborted lanes refused the
-            # token (their pos did NOT advance — we retry after rebuilding)
-            self.pos = np.asarray(self.state["pos"]).copy()
+        for _ in range(-(-steps // self.K)):
+            toks, self.state = self.mega_fn(
+                self.params, self.state, self.tokens,
+                jnp.asarray(self.lengths, jnp.int32))
+            # the engine is the source of truth: refused lanes' pos did NOT
+            # advance and toks[:, -1] is their still-pending refused token
+            self.tokens = toks[:, -1:]
+            self.pos = np.asarray(self.state["pos"]).copy()  # 1 sync per K
+            if self.verify and "table" in self.state:
+                self._check_block_table()
             aborted = self.state.get("aborted")
             if aborted is not None and bool(np.asarray(aborted).any()):
-                # an aborted lane's logits were computed with its current
-                # page missing — keep the REFUSED input token so the
-                # post-rebuild retry re-issues it, not a garbage argmax
-                self.tokens = jnp.where(jnp.asarray(aborted)[:, None],
-                                        prev_tokens, self.tokens)
                 # the Section 4.3 path, live: grow the pool, re-hash, move
-                # the KV pages along, clear the flags; the refused tokens
-                # are re-issued on the next step at the same position
+                # the KV pages along, rebuild the block-table cache, clear
+                # the flags; the refused suffix is re-issued by the next
+                # megastep at the frozen positions
                 n_pages = self.state["pools"].k.shape[1]
                 self.state = EG.rebuild_page_table(self.state,
                                                    n_pages=n_pages * 2)
                 self.rebuilds += 1
-            # evict finished sequences; re-admit fresh ones in their slot
-            done = np.nonzero(self.pos >= self.lengths)[0]
-            if len(done) and "table" in self.state:
-                mask = np.zeros(self.B, bool)
-                mask[done] = True
-                self.state["table"] = PT.free_sequences(
-                    self.state["table"], self.state["seq_ids"],
-                    jnp.asarray(self.pos), page_size=self.page_size,
-                    max_pages=maxP, active=jnp.asarray(mask))
-                seq_ids = np.asarray(self.state["seq_ids"]).copy()
-                for slot in done:
-                    seq_ids[slot] = self.next_seq_id
-                    self.next_seq_id += 1
-                    self.pos[slot] = 0
-                    self.lengths[slot] = self.rng.integers(
-                        self.max_len // 3, self.max_len - 1)
-                    self.evictions += 1
-                self.state["seq_ids"] = jnp.asarray(seq_ids)
-            elif len(done):
-                for slot in done:
-                    self.pos[slot] = 0
-                    self.evictions += 1
+            self._evict_and_readmit(maxP)
+
+    def _evict_and_readmit(self, maxP: int):
+        """One vectorized pass: evict every finished slot (their pages
+        become tombstones, their cached block-table rows are invalidated)
+        and re-admit a fresh sequence in place."""
+        done = self.pos >= self.lengths
+        n = int(done.sum())
+        if not n:
+            return
+        dmask = jnp.asarray(done)
+        if "table" in self.state:
+            self.state["table"] = PT.free_sequences(
+                self.state["table"], self.state["seq_ids"],
+                jnp.asarray(self.pos), page_size=self.page_size,
+                max_pages=maxP, active=dmask)
+            self.state["block_table"] = PT.invalidate_block_rows(
+                self.state["block_table"], dmask)
+        seq_ids = np.asarray(self.state["seq_ids"]).copy()
+        seq_ids[done] = self.next_seq_id + np.arange(n, dtype=seq_ids.dtype)
+        self.next_seq_id += n
+        self.pos[done] = 0
+        self.lengths[done] = self.rng.integers(
+            self.max_len // 3, self.max_len - 1, size=n)
+        self.evictions += n
+        self.state["seq_ids"] = jnp.asarray(seq_ids)
+        self.state["pos"] = jnp.asarray(self.pos)
+        # re-admitted slots decode again (done lanes latched inactive
+        # in-graph via stop_len).  Admissions here start at pos 0 with no
+        # pages, so the invalidated (-1) rows above ARE the correct cache;
+        # an admission that brought prefilled pages would instead rebuild
+        # its rows from the authoritative lookup (PT.rebuild_block_table)
+        self.state["active"] = jnp.asarray(self.state["active"]) | dmask
 
     def table_stats(self):
         if "table" not in self.state:
@@ -117,26 +144,34 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=48)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--megastep", type=int, default=4,
+                    help="tokens per dispatch (K of make_serve_megastep)")
+    ap.add_argument("--verify-block-table", action="store_true",
+                    help="CI/debug: check the incremental block-table "
+                         "cache against the wait-free lookup every round")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
     params, _ = model.init(cfg, jax.random.PRNGKey(0))
     srv = ContinuousBatcher(cfg, params, batch=args.batch,
-                            max_len=args.max_len, page_size=args.page_size)
+                            max_len=args.max_len, page_size=args.page_size,
+                            megastep_k=args.megastep,
+                            verify_block_table=args.verify_block_table)
     for r in range(args.rounds):
         srv.decode_round(args.steps_per_round)
         st = srv.table_stats()
         if st is not None:
             print(f"[serve] round {r}: evictions={srv.evictions} "
+                  f"rebuilds={srv.rebuilds} "
                   f"live_pages={int(st.live_pages)} "
                   f"tombstones={int(st.tombstones)} "
                   f"occupancy={float(st.occupancy):.3f}")
         else:
             print(f"[serve] round {r}: evictions={srv.evictions} "
                   f"(attention-free arch: no page table)")
-    print("[serve] done — page slots were reused in place "
-          "(no rebuild, no compaction)")
+    print(f"[serve] done — megastep K={srv.K}: host synced once per K "
+          "tokens; page slots were reused in place (no compaction)")
     return 0
 
 

@@ -1,10 +1,23 @@
-"""Decode engines: one ``serve_step`` per architecture family.
+"""Decode engines: one ``serve_step`` per architecture family, plus the
+K-token ``make_serve_megastep`` (one dispatch, K greedy tokens).
 
 The hash-table page table (serving/page_table) is consulted ONCE per step
-(alloc + wait-free lookup); page locality is compacted ONCE per chip
+(alloc + block-table read); page locality is compacted ONCE per chip
 (serving/paged.compact_local); every attention layer then reuses the same
-compacted page list — the paper's lookup is on the critical path exactly
-once per token, as in a production block-table.
+compacted page list.  The block-table read is served from the persistent
+``state["block_table"]`` cache, scatter-updated at page-boundary crossings
+by ``PT.alloc_step_incremental`` — O(crossings) probed keys per token
+instead of the old O(B·max_pages) full re-probe — while the paper's
+wait-free ``lookup_pages`` remains the authoritative read for admission,
+Section 4.3 rebuilds, and the CI verification mode
+(``PT.verify_block_table``).
+
+The megastep fuses K decode tokens into one ``jax.lax.scan``: greedy
+sampling runs in-graph (token t+1 = argmax of token t's logits), page
+allocation runs inside the scan, and done/abort conditions latch into
+on-device flags, so the host syncs once per K tokens.  A lane that ABORTs
+mid-megastep freezes (pos, pending token, recurrent state) and the batcher
+re-issues the refused suffix after ``rebuild_page_table``.
 
 Sharding, gspmd baseline (``serve_rules``): activations replicated (decode
 activations are KB-scale), weights TP-sharded over ``model``, page pools
@@ -167,6 +180,10 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
         }
         if n_paged:
             state["table"] = PT.create_table(n_pages)
+            # incremental block-table cache: scatter-updated at page-boundary
+            # crossings, (re)built from the wait-free lookup on admission /
+            # rebuild only (see page_table.alloc_step_incremental)
+            state["block_table"] = jnp.full((B, maxP), -1, jnp.int32)
             kv_dtype = (jnp.int8 if cfg.kv_cache_dtype == "int8"
                         else dtype)
             state["pools"] = paged.make_pools(n_paged, n_pages, page_size,
@@ -199,6 +216,7 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
     if n_paged:
         axes["table"] = BT.HashTable(table=(None,), num_keys=(),
                                      num_tombs=(), seed=())
+        axes["block_table"] = (None, None)
         pool_ax = paged.POOL_AXES_TP if manual_tp else paged.POOL_AXES
         axes["pools"] = paged.PagedPools(k=pool_ax, v=pool_ax)
         if cfg.kv_cache_dtype == "int8":
@@ -270,6 +288,11 @@ def rebuild_page_table(state: Dict[str, Any], *, n_pages: Optional[int] = None,
         state["pool_scales"] = paged.PoolScales(
             k=move(state["pool_scales"].k, 1),
             v=move(state["pool_scales"].v, 1))
+    if "block_table" in state:
+        # every slot moved: rebuild the incremental cache from the fresh
+        # table via the authoritative wait-free lookup
+        state["block_table"] = PT.rebuild_block_table(
+            fresh, state["seq_ids"], state["block_table"].shape[1])
     state["aborted"] = jnp.zeros_like(state["aborted"])
     return state
 
@@ -476,6 +499,54 @@ def make_serve_step(cfg, *, S_max: int, rules=None,
     return serve_step
 
 
+def make_serve_megastep(cfg, *, S_max: int, K: int, rules=None,
+                        page_size: int = DEFAULT_PAGE_SIZE):
+    """The decode megastep: K tokens per dispatch via one ``jax.lax.scan``
+    over the per-token serve body — in-graph greedy sampling feeds token
+    t+1 from token t's logits, page allocation runs inside the scan, and
+    done/abort conditions latch into on-device flags, so the host syncs
+    once per K tokens instead of once per token.
+
+    Returns ``megastep(params, state, tokens [B,1], stop_len=None) ->
+    (tokens int32[B, K], state')``.  Positions come from ``state["pos"]``
+    (the engine is the source of truth); for the vlm family the M-RoPE
+    positions are derived in-graph from the same counter.  ``tokens[:, -1]``
+    is always the correct next feed: the last greedy sample for healthy
+    lanes, the frozen refused token for lanes that ABORTed mid-megastep
+    (their ``pos`` did not advance — after ``rebuild_page_table`` the next
+    megastep re-issues the refused suffix automatically).  ``stop_len``
+    int32[B] latches ``active=False`` in-graph when a lane's position
+    reaches its stop, so finished lanes stop allocating pages without a
+    host round-trip.  K=1 degenerates to the single step + in-graph argmax.
+
+    With ``tp_impl="manual"`` the whole scan lives inside the single
+    fully-manual shard_map region; otherwise the per-token body is the
+    gspmd step.  The factory tags the returned fn with ``.megastep``
+    (``"scan-K{K}"``) — recorded by dry-run artifacts so a silent fallback
+    to per-token dispatch fails CI's ``--expect-fused``."""
+    if rules is not None and _manual_decode_ok(cfg, rules):
+        return _make_manual_serve_megastep(cfg, S_max=S_max, K=K,
+                                           rules=rules, page_size=page_size)
+    if rules is not None and cfg.tp_impl == "manual":
+        logger.warning(
+            "fused manual-TP decode unavailable for %s — %s; "
+            "megastep runs over the gspmd serve body",
+            cfg.name, _manual_decode_reason(cfg, rules))
+    n_chips = _n_chips(rules)
+
+    def megastep(params, state, tokens, stop_len=None):
+        def token_step(st, tok, pos, mrope):
+            with ctx.use_rules(rules):
+                return _serve_step_impl(cfg, params, st, tok, pos, mrope,
+                                        rules=rules, S_max=S_max,
+                                        page_size=page_size,
+                                        n_chips=n_chips)
+        return _mega_scan(cfg, K, token_step, state, tokens, stop_len)
+
+    megastep.megastep = TP.decode_megastep_mode(cfg, rules, K)
+    return megastep
+
+
 # ---------------------------------------------------------------------------
 # Fused manual-TP decode (tp_impl="manual"): the whole step in ONE manual
 # shard_map region over every mesh axis.
@@ -553,14 +624,12 @@ def _ring_attn_shard(cfg, x, ap, ring_k_l, ring_v_l, ring_pos, positions,
     return y[:, None], ring_k_l, ring_v_l
 
 
-def _make_manual_serve_step(cfg, *, S_max: int, rules,
-                            page_size: int = DEFAULT_PAGE_SIZE):
-    """Decode step for ``tp_impl="manual"``: page-table alloc + wait-free
-    lookup + compaction + all layers + read-out fused into a single manual
-    shard_map (see module docstring for the layout).  Covers the dense /
-    moe / vlm stacked scan, the gemma3 local:global superblocks (ring
-    buffers head-sharded in-region) and the hybrid mamba backbone + shared
-    attention block (mamba replicated, shared block Megatron-sharded)."""
+def _manual_decode_parts(cfg, *, S_max: int, rules,
+                         page_size: int = DEFAULT_PAGE_SIZE):
+    """Shared pieces of the fused manual-TP decode region: the shard_map
+    spec builder and the per-token body (runs INSIDE the region) — used by
+    both the single serve step and the K-token megastep, which wraps the
+    same body in an in-region ``lax.scan``."""
     mesh = rules.mesh
     pd_axes = _pd_axes(rules)
     n_pd = 1
@@ -571,13 +640,7 @@ def _make_manual_serve_step(cfg, *, S_max: int, rules,
     maxP = -(-S_max // page_size)
     vocab_sharded = (not cfg.tie_embeddings) and cfg.vocab_size % tp == 0
 
-    def serve_step(params, state, tokens, positions, mrope_positions=None):
-        B = tokens.shape[0]
-        n_pages = state["pools"].k.shape[1]
-        npr = n_pages // n_pd
-        cap = paged.capacity(B, maxP, n_pd,
-                             factor=cfg.page_capacity_factor)
-
+    def make_specs(params, state):
         pool_spec = P(None, pd_axes or None, None, "model", None)
         state_specs: Dict[str, Any] = {k: P() for k in state}
         state_specs["pools"] = paged.PagedPools(k=pool_spec, v=pool_spec)
@@ -591,64 +654,93 @@ def _make_manual_serve_step(cfg, *, S_max: int, rules,
         param_specs = TP.decode_param_specs(cfg, params,
                                             vocab_sharded=vocab_sharded,
                                             kv_rep=kv_rep)
+        return param_specs, state_specs
+
+    def token_body(params, state, tokens, positions, mrope, *, npr, cap):
+        x = nn.embed_lookup(params["embed"], tokens)      # replicated
+        new_state = dict(state)
+        chip_pd = _chip_idx(pd_axes, mesh)
+        act = state["active"] & ~state["aborted"]
+        # once per token, identical on every chip: incremental allocation
+        # (only crossings probe) + the cached block-table read; the paper's
+        # wait-free lookup stays authoritative for admission/rebuild
+        (table, write_slot, aborts), bt = PT.alloc_step_incremental(
+            state["table"], state["seq_ids"], positions,
+            state["block_table"], page_size=page_size, active=act)
+        slots = PT.block_table_slots(bt, positions, page_size=page_size)
+        lp = paged.compact_local(slots, chip_pd, npr, cap)
+        new_state["table"] = table
+        new_state["block_table"] = bt
+        new_state["aborted"] = state["aborted"] | aborts
+
+        attn = functools.partial(
+            _paged_attn_shard, cfg, lp=lp, write_slot=write_slot,
+            positions=positions, chip_pd=chip_pd, npr=npr,
+            page_size=page_size, pd_axes=pd_axes, kv_rep=kv_rep)
+
+        if cfg.pattern_local:
+            x_out = _gemma_layers_shard(cfg, params, state, new_state,
+                                        x, attn, positions, kv_rep)
+        elif cfg.family == "hybrid":
+            x_out = _hybrid_layers_shard(cfg, params, state, new_state,
+                                         x, attn)
+        else:
+            sk, sv = _scale_xs(cfg, state, cfg.num_layers)
+
+            def layer(x, xs):
+                lpar, pk, pv, sk_l, sv_l = xs
+                h, pk, pv, sc = attn(
+                    nn.rmsnorm(lpar["ln1"], x), lpar["attn"], pk, pv,
+                    _scales_in(cfg, sk_l, sv_l), mrope=mrope)
+                x = x + h
+                xn = nn.rmsnorm(lpar["ln2"], x)
+                if cfg.family == "moe":
+                    y = MOE.moe_decode_local(lpar["moe"], xn, cfg)
+                else:
+                    y = TP.mlp_decode_manual(lpar["mlp"], xn)
+                return x + y, (pk, pv) + tuple(sc)
+
+            x_out, (pk, pv, sk2, sv2) = jax.lax.scan(
+                layer, x, (params["layers"], state["pools"].k,
+                           state["pools"].v, sk, sv),
+                unroll=cfg.scan_unroll)
+            new_state["pools"] = paged.PagedPools(k=pk, v=pv)
+            if cfg.kv_cache_dtype == "int8":
+                new_state["pool_scales"] = paged.PoolScales(k=sk2,
+                                                            v=sv2)
+        x_out = nn.rmsnorm(params["final_norm"], x_out)
+        logits = TP.logits_decode_manual(cfg, params, x_out,
+                                         vocab_sharded=vocab_sharded)
+        new_state["pos"] = jnp.where(act & ~aborts, positions + 1,
+                                     positions)
+        return logits[:, 0].astype(jnp.float32), new_state
+
+    return mesh, n_pd, maxP, make_specs, token_body
+
+
+def _make_manual_serve_step(cfg, *, S_max: int, rules,
+                            page_size: int = DEFAULT_PAGE_SIZE):
+    """Decode step for ``tp_impl="manual"``: page-table alloc + block-table
+    read + compaction + all layers + read-out fused into a single manual
+    shard_map (see module docstring for the layout).  Covers the dense /
+    moe / vlm stacked scan, the gemma3 local:global superblocks (ring
+    buffers head-sharded in-region) and the hybrid mamba backbone + shared
+    attention block (mamba replicated, shared block Megatron-sharded)."""
+    mesh, n_pd, maxP, make_specs, token_body = _manual_decode_parts(
+        cfg, S_max=S_max, rules=rules, page_size=page_size)
+
+    def serve_step(params, state, tokens, positions, mrope_positions=None):
+        B = tokens.shape[0]
+        n_pages = state["pools"].k.shape[1]
+        npr = n_pages // n_pd
+        cap = paged.capacity(B, maxP, n_pd,
+                             factor=cfg.page_capacity_factor)
+        param_specs, state_specs = make_specs(params, state)
         mr_spec = P() if mrope_positions is not None else None
 
         def body(params, state, tokens, positions, mrope):
-            x = nn.embed_lookup(params["embed"], tokens)      # replicated
-            new_state = dict(state)
-            chip_pd = _chip_idx(pd_axes, mesh)
-            act = state["active"] & ~state["aborted"]
-            # the paper's lookup, once per step, identical on every chip
-            table, write_slot, aborts = PT.alloc_step(
-                state["table"], state["seq_ids"], positions,
-                page_size=page_size, active=act)
-            slots = PT.lookup_pages(table, state["seq_ids"], positions,
-                                    page_size=page_size, max_pages=maxP)
-            lp = paged.compact_local(slots, chip_pd, npr, cap)
-            new_state["table"] = table
-            new_state["aborted"] = state["aborted"] | aborts
-
-            attn = functools.partial(
-                _paged_attn_shard, cfg, lp=lp, write_slot=write_slot,
-                positions=positions, chip_pd=chip_pd, npr=npr,
-                page_size=page_size, pd_axes=pd_axes, kv_rep=kv_rep)
-
-            if cfg.pattern_local:
-                x_out = _gemma_layers_shard(cfg, params, state, new_state,
-                                            x, attn, positions, kv_rep)
-            elif cfg.family == "hybrid":
-                x_out = _hybrid_layers_shard(cfg, params, state, new_state,
-                                             x, attn)
-            else:
-                sk, sv = _scale_xs(cfg, state, cfg.num_layers)
-
-                def layer(x, xs):
-                    lpar, pk, pv, sk_l, sv_l = xs
-                    h, pk, pv, sc = attn(
-                        nn.rmsnorm(lpar["ln1"], x), lpar["attn"], pk, pv,
-                        _scales_in(cfg, sk_l, sv_l), mrope=mrope)
-                    x = x + h
-                    xn = nn.rmsnorm(lpar["ln2"], x)
-                    if cfg.family == "moe":
-                        y = MOE.moe_decode_local(lpar["moe"], xn, cfg)
-                    else:
-                        y = TP.mlp_decode_manual(lpar["mlp"], xn)
-                    return x + y, (pk, pv) + tuple(sc)
-
-                x_out, (pk, pv, sk2, sv2) = jax.lax.scan(
-                    layer, x, (params["layers"], state["pools"].k,
-                               state["pools"].v, sk, sv),
-                    unroll=cfg.scan_unroll)
-                new_state["pools"] = paged.PagedPools(k=pk, v=pv)
-                if cfg.kv_cache_dtype == "int8":
-                    new_state["pool_scales"] = paged.PoolScales(k=sk2,
-                                                                v=sv2)
-            x_out = nn.rmsnorm(params["final_norm"], x_out)
-            logits = TP.logits_decode_manual(cfg, params, x_out,
-                                             vocab_sharded=vocab_sharded)
-            new_state["pos"] = jnp.where(act & ~aborts, positions + 1,
-                                         positions)
-            return logits[:, 0].astype(jnp.float32), new_state
+            return token_body(params, state, tokens, positions, mrope,
+                              npr=npr, cap=cap)
 
         mapped = shard_map(
             body, mesh=mesh,
@@ -657,6 +749,69 @@ def _make_manual_serve_step(cfg, *, S_max: int, rules,
         return mapped(params, state, tokens, positions, mrope_positions)
 
     return serve_step
+
+
+def _mega_scan(cfg, K: int, token_step, state, tokens, stop_len):
+    """The K-token scan at the megastep's core: in-graph greedy sampling
+    feeds token t+1 from token t's logits; a lane whose allocation ABORTs
+    latches — its pending (refused) token and position freeze so the host
+    can re-issue the suffix after a rebuild; with ``stop_len`` a lane whose
+    position reaches its stop latches ``active=False`` (done) in-graph.
+    Returns (tokens int32[B, K] — entry k is the token sampled after step k,
+    frozen at the refused token for aborted lanes — and the final state)."""
+    B = tokens.shape[0]
+
+    def one(carry, _):
+        st, tok = carry
+        pos = st["pos"]
+        mrope = (jnp.broadcast_to(pos[None, :, None],
+                                  (3, B, 1)).astype(jnp.int32)
+                 if cfg.family == "vlm" else None)
+        logits, st2 = token_step(st, tok, pos, mrope)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        # aborted lanes keep their refused token pending for the re-issue
+        tok2 = jnp.where(st2["aborted"][:, None], tok, nxt)
+        if stop_len is not None:
+            st2 = dict(st2)
+            st2["active"] = st2["active"] & (st2["pos"] < stop_len)
+        return (st2, tok2), tok2[:, 0]
+
+    (st, _), toks = jax.lax.scan(one, (state, tokens), None, length=K)
+    return toks.T, st
+
+
+def _make_manual_serve_megastep(cfg, *, S_max: int, K: int, rules,
+                                page_size: int = DEFAULT_PAGE_SIZE):
+    """Megastep twin of ``_make_manual_serve_step``: the K-token scan lives
+    INSIDE the single fully-manual shard_map region (the pinned XLA rejects
+    partially-auto regions — dist/README), so K tokens cost one dispatch
+    and zero host round-trips."""
+    mesh, n_pd, maxP, make_specs, token_body = _manual_decode_parts(
+        cfg, S_max=S_max, rules=rules, page_size=page_size)
+
+    def megastep(params, state, tokens, stop_len=None):
+        B = tokens.shape[0]
+        n_pages = state["pools"].k.shape[1]
+        npr = n_pages // n_pd
+        cap = paged.capacity(B, maxP, n_pd,
+                             factor=cfg.page_capacity_factor)
+        param_specs, state_specs = make_specs(params, state)
+        stop_spec = P() if stop_len is not None else None
+
+        def body(params, state, tokens, stop_len):
+            def token_step(st, tok, pos, mrope):
+                return token_body(params, st, tok, pos, mrope,
+                                  npr=npr, cap=cap)
+            return _mega_scan(cfg, K, token_step, state, tokens, stop_len)
+
+        mapped = shard_map(
+            body, mesh=mesh,
+            in_specs=(param_specs, state_specs, P(), stop_spec),
+            out_specs=(P(), state_specs), check_vma=False)
+        return mapped(params, state, tokens, stop_len)
+
+    megastep.megastep = TP.decode_megastep_mode(cfg, rules, K)
+    return megastep
 
 
 def _gemma_layers_shard(cfg, params, state, new_state, x, attn, positions,
@@ -738,8 +893,12 @@ def _hybrid_layers_shard(cfg, params, state, new_state, x, attn):
         x, s2 = HY.mamba_decode_chunk(cfg, params["layers"], state["ssm"],
                                       x, n_inv * every, cfg.num_layers)
         new_ssm_chunks.append(s2)
-    new_state["ssm"] = jax.tree.map(
-        lambda *ts: jnp.concatenate(ts, axis=0), *new_ssm_chunks)
+    # new_state["aborted"] already includes this step's aborts: a refused
+    # lane's recurrence must not advance (its token is re-issued later)
+    new_state["ssm"] = _freeze_lanes(
+        jax.tree.map(lambda *ts: jnp.concatenate(ts, axis=0),
+                     *new_ssm_chunks),
+        state["ssm"], state["active"] & ~new_state["aborted"])
     new_state["pools"] = paged.PagedPools(k=jnp.stack(pk_out),
                                           v=jnp.stack(pv_out))
     if cfg.kv_cache_dtype == "int8":
@@ -750,17 +909,33 @@ def _hybrid_layers_shard(cfg, params, state, new_state, x, attn):
 
 def _page_ops(cfg, state, positions, active, *, S_max, page_size, n_chips,
               rules):
+    """Once-per-token page-table work: incremental allocation (only the
+    page-boundary crossings probe the table) + the block-table read served
+    from the persistent cache — O(crossings) probes instead of the
+    O(B·max_pages) full re-probe (``PT.lookup_pages`` stays the
+    authoritative path for admission / rebuild / verification)."""
     maxP = -(-S_max // page_size)
-    table, write_slot, aborts = PT.alloc_step(
-        state["table"], state["seq_ids"], positions, page_size=page_size,
-        active=active)
-    slots = PT.lookup_pages(table, state["seq_ids"], positions,
-                            page_size=page_size, max_pages=maxP)
+    (table, write_slot, aborts), bt = PT.alloc_step_incremental(
+        state["table"], state["seq_ids"], positions, state["block_table"],
+        page_size=page_size, active=active)
+    slots = PT.block_table_slots(bt, positions, page_size=page_size)
     B = positions.shape[0]
     cap = paged.capacity(B, maxP, n_chips,
                          factor=cfg.page_capacity_factor)
     lp_arrays = compact_op(rules, slots, BT.size(table), cap)
-    return table, write_slot, aborts, lp_arrays
+    return table, write_slot, aborts, bt, lp_arrays
+
+
+def _freeze_lanes(new_tree, old_tree, act):
+    """Per-lane state freeze for refused/inactive lanes: leaves are
+    [L, B, ...] stacked per-layer state.  A refused token must be
+    side-effect-free — SSM recurrences are NOT idempotent under re-issue
+    (unlike the KV/ring writes, which rewrite the same slot with the same
+    value), so the engine masks them here."""
+    def sel(n, o):
+        m = act.reshape((1, -1) + (1,) * (n.ndim - 2))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, new_tree, old_tree)
 
 
 def _scale_xs(cfg, state, n_layers):
@@ -792,10 +967,11 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
     aborts = jnp.zeros((B,), bool)
 
     if cfg.family in ("dense", "moe", "vlm"):
-        table, write_slot, aborts, lp = _page_ops(
+        table, write_slot, aborts, bt, lp = _page_ops(
             cfg, state, positions, act, S_max=S_max, page_size=page_size,
             n_chips=n_chips, rules=rules)
         new_state["table"] = table
+        new_state["block_table"] = bt
 
         if cfg.pattern_local:
             x, pools, ring, scales = _gemma_layers(cfg, params, state, x,
@@ -838,13 +1014,14 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
 
         x, ssm2 = jax.lax.scan(body, x, (params["layers"], state["ssm"]),
                                unroll=cfg.scan_unroll)
-        new_state["ssm"] = ssm2
+        new_state["ssm"] = _freeze_lanes(ssm2, state["ssm"], act)
 
     elif cfg.family == "hybrid":
-        table, write_slot, aborts, lp = _page_ops(
+        table, write_slot, aborts, bt, lp = _page_ops(
             cfg, state, positions, act, S_max=S_max, page_size=page_size,
             n_chips=n_chips, rules=rules)
         new_state["table"] = table
+        new_state["block_table"] = bt
         every = cfg.shared_attn_every
         n_inv = cfg.num_layers // every
 
@@ -874,8 +1051,11 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
                                           state["ssm"], x,
                                           n_inv * every, cfg.num_layers)
             new_ssm_chunks.append(s2)
-        new_state["ssm"] = jax.tree.map(
-            lambda *ts: jnp.concatenate(ts, axis=0), *new_ssm_chunks)
+        # a lane refused THIS step (abort) re-issues its token after the
+        # rebuild — its recurrent state must not advance either
+        new_state["ssm"] = _freeze_lanes(
+            jax.tree.map(lambda *ts: jnp.concatenate(ts, axis=0),
+                         *new_ssm_chunks), state["ssm"], act & ~aborts)
         new_state["pools"] = paged.PagedPools(k=jnp.stack(pk_out),
                                               v=jnp.stack(pv_out))
         if cfg.kv_cache_dtype == "int8":
@@ -883,10 +1063,11 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
                 k=jnp.stack(sk_out), v=jnp.stack(sv_out))
 
     elif cfg.family == "encdec":
-        table, write_slot, aborts, lp = _page_ops(
+        table, write_slot, aborts, bt, lp = _page_ops(
             cfg, state, positions, act, S_max=S_max, page_size=page_size,
             n_chips=n_chips, rules=rules)
         new_state["table"] = table
+        new_state["block_table"] = bt
 
         sk, sv = _scale_xs(cfg, state, cfg.num_layers)
 

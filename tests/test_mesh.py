@@ -250,6 +250,74 @@ print("fused manual decode == gspmd OK")
 """)
 
 
+def test_megastep_matches_single_steps_multidevice():
+    """The K=8 decode megastep is BITWISE-identical (greedy tokens + final
+    state) to 8 single steps on an 8-device mesh, for BOTH decode families:
+    the gspmd step and the fused manual-TP region (where the whole scan
+    lives inside the one fully-manual shard_map).  Covers dense, MoE,
+    int8-KV, gemma3 local-window rings and the zamba2 hybrid."""
+    run_with_devices(COMMON + """
+import dataclasses
+from repro.configs import get_smoke_config
+from repro.dist.sharding import serve_rules, serve_manual_rules
+from repro.models.registry import get_model
+from repro.serving import engine as EG
+from repro.serving import page_table as PT
+
+CASES = [
+    ("qwen2.5-32b", (2, 2, 2), ("pod", "data", "model"), {}),
+    ("granite-moe-1b-a400m", (4, 2), ("data", "model"), {}),
+    ("qwen2.5-32b", (4, 2), ("data", "model"), {"kv_cache_dtype": "int8"}),
+    ("gemma3-12b", (2, 2, 2), ("pod", "data", "model"), {}),
+    ("zamba2-1.2b", (4, 2), ("data", "model"), {}),
+]
+B, K = 2, 8
+for arch, shape, axes, over in CASES:
+    base = dataclasses.replace(get_smoke_config(arch), **over)
+    mesh = jax.make_mesh(shape, axes)
+    model = get_model(base)
+    params, _ = model.init(base, jax.random.PRNGKey(0))
+    tok0 = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0,
+                              base.vocab_size)
+    for impl, mk_rules in (("gspmd", serve_rules),
+                           ("manual", serve_manual_rules)):
+        cfg = (dataclasses.replace(base, tp_impl="manual")
+               if impl == "manual" else base)
+        rules = mk_rules(mesh)
+        if impl == "manual":
+            assert EG._manual_decode_ok(cfg, rules), (arch, "gate refused")
+        state, _ = EG.make_decode_state(cfg, B, S_max=32, page_size=4,
+                                        rules=rules)
+        step = jax.jit(EG.make_serve_step(cfg, S_max=32, page_size=4,
+                                          rules=rules))
+        st, tok, ref = dict(state), tok0, []
+        for _ in range(K):
+            lg, st = step(params, st, tok, st["pos"])
+            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
+            tok = jnp.where(st["aborted"][:, None], tok, nxt)
+            ref.append(np.asarray(tok[:, 0]))
+        ref = np.stack(ref, axis=1)
+        state2, _ = EG.make_decode_state(cfg, B, S_max=32, page_size=4,
+                                         rules=rules)
+        mega = jax.jit(EG.make_serve_megastep(cfg, S_max=32, K=K,
+                                              page_size=4, rules=rules))
+        mtoks, mst = mega(params, state2, tok0)
+        np.testing.assert_array_equal(np.asarray(mtoks), ref,
+                                      err_msg=f"{arch}/{impl}")
+        for k in st:
+            ok = all(jax.tree.leaves(jax.tree.map(
+                lambda x, y: bool(np.array_equal(np.asarray(x),
+                                                 np.asarray(y))),
+                st[k], mst[k])))
+            assert ok, (arch, impl, k, "state leaf diverged")
+        assert int(PT.verify_block_table(
+            mst["table"], mst["seq_ids"], mst["pos"], mst["block_table"],
+            page_size=4)) == 0, (arch, impl)
+    print(arch, shape, over, "megastep == single steps OK (gspmd+manual)")
+print("megastep parity multidevice OK")
+""")
+
+
 def test_sharded_dht_roundtrip():
     run_with_devices(COMMON + """
 from repro.core import sharded as SHT

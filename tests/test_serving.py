@@ -133,6 +133,227 @@ def test_manual_decode_gate_and_fallback_reasons():
     assert "manual" in EG._manual_decode_reason(dense, rules)
 
 
+MEGA_CASES = [("qwen2.5-32b", {}), ("granite-moe-1b-a400m", {}),
+              ("qwen2.5-32b", {"kv_cache_dtype": "int8"}),
+              ("gemma3-12b", {}), ("zamba2-1.2b", {})]
+
+
+def _drive_single(cfg, params, state, tok, step, K):
+    """Reference driver: K jitted single steps + host-side greedy sampling
+    (exactly what the megastep fuses in-graph)."""
+    B = tok.shape[0]
+    toks = []
+    for _ in range(K):
+        pos = state["pos"]
+        args = (params, state, tok, pos)
+        if cfg.family == "vlm":
+            args += (jnp.broadcast_to(pos[None, :, None],
+                                      (3, B, 1)).astype(jnp.int32),)
+        logits, state = step(*args)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        tok = jnp.where(state["aborted"][:, None], tok, nxt)
+        toks.append(np.asarray(tok[:, 0]))
+    return np.stack(toks, axis=1), state
+
+
+def _assert_state_bitwise(a, b):
+    mism = [k for k in a
+            if not all(jax.tree.leaves(jax.tree.map(
+                lambda x, y: bool(np.array_equal(np.asarray(x),
+                                                 np.asarray(y))),
+                a[k], b[k])))]
+    assert not mism, f"state leaves diverged: {mism}"
+
+
+@pytest.mark.parametrize("arch,over", MEGA_CASES)
+def test_megastep_matches_single_steps(arch, over):
+    """K=8 megastep == 8 single steps, BITWISE: same greedy tokens, same
+    final state (pools included) — the scan dispatch may not change a single
+    bit of the decode."""
+    cfg = dataclasses.replace(get_smoke_config(arch), **over)
+    model = get_model(cfg)
+    params, _ = model.init(cfg, jax.random.PRNGKey(0))
+    B, K = 2, 8
+    tok0 = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0,
+                              cfg.vocab_size)
+    state, _ = EG.make_decode_state(cfg, B, S_max=32, page_size=4)
+    step = jax.jit(EG.make_serve_step(cfg, S_max=32, page_size=4))
+    ref_toks, ref_state = _drive_single(cfg, params, dict(state), tok0,
+                                        step, K)
+
+    state2, _ = EG.make_decode_state(cfg, B, S_max=32, page_size=4)
+    mega = jax.jit(EG.make_serve_megastep(cfg, S_max=32, K=K, page_size=4))
+    mtoks, mstate = mega(params, state2, tok0)
+    np.testing.assert_array_equal(np.asarray(mtoks), ref_toks)
+    _assert_state_bitwise(ref_state, mstate)
+    if "table" in mstate:
+        assert int(PT.verify_block_table(
+            mstate["table"], mstate["seq_ids"], mstate["pos"],
+            mstate["block_table"], page_size=4)) == 0
+
+
+def test_megastep_abort_latch_and_resume():
+    """Abort mid-megastep: the lane latches at the right token (pos frozen,
+    pending token = the refused one, trailing outputs frozen), and after the
+    §4.3 rebuild the next megastep re-issues the refused suffix — the full
+    8-token stream matches a single-step driver that rebuilds and retries
+    the moment the abort surfaces.  Also exercises the in-graph done latch
+    (``stop_len``)."""
+    cfg = get_smoke_config("qwen2.5-32b")
+    model = get_model(cfg)
+    params, _ = model.init(cfg, jax.random.PRNGKey(0))
+    B, page_size, K = 2, 4, 8                          # S_max=8 -> maxP=2
+    step = jax.jit(EG.make_serve_step(cfg, S_max=8, page_size=page_size))
+    mega = jax.jit(EG.make_serve_megastep(cfg, S_max=8, K=K,
+                                          page_size=page_size))
+    state, _ = EG.make_decode_state(cfg, B, S_max=8, page_size=page_size)
+    n_pages = state["pools"].k.shape[1]                # 6
+
+    # shared prefix: fill 4 of 6 pages, then re-admit WITHOUT evicting
+    # (stale pages stay live — the scenario slack cannot absorb)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for _ in range(8):
+        logits, state = step(params, state, tok, state["pos"])
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    state = dict(state)
+    state["seq_ids"] = state["seq_ids"] + B
+    state["pos"] = jnp.zeros((B,), jnp.int32)
+    tok0 = jnp.zeros((B, 1), jnp.int32)
+
+    # PATH A: single steps, rebuild immediately when the abort surfaces
+    stA, tokA, streamA, rebuildsA = dict(state), tok0, [], 0
+    while len(streamA) < 8:
+        logits, st2 = step(params, stA, tokA, stA["pos"])
+        if bool(np.asarray(st2["aborted"]).any()):
+            assert rebuildsA == 0
+            stA = EG.rebuild_page_table(st2, n_pages=n_pages * 2)
+            rebuildsA += 1
+            continue                                   # re-issue, same pos
+        tokA = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        streamA.append(np.asarray(tokA[:, 0]))
+        stA = st2
+    streamA = np.stack(streamA, axis=1)
+    assert rebuildsA == 1
+
+    # PATH B: one megastep aborts at token index 4 and latches
+    toksB1, stB = mega(params, dict(state), tok0)
+    assert np.asarray(stB["aborted"]).all(), "abort not latched"
+    assert (np.asarray(stB["pos"]) == 4).all(), "latched at wrong token"
+    t1 = np.asarray(toksB1)
+    np.testing.assert_array_equal(                      # suffix frozen at
+        t1[:, 4:], np.broadcast_to(t1[:, 3:4], (B, 4)))  # the refused token
+    stB = EG.rebuild_page_table(stB, n_pages=n_pages * 2)
+    assert not np.asarray(stB["aborted"]).any()
+    # refused suffix re-issued: feed the pending token; stop_len latches the
+    # lanes done in-graph at pos 8 (S_max) instead of overshooting
+    toksB2, stB = mega(params, stB, toksB1[:, -1:],
+                       jnp.full((B,), 8, jnp.int32))
+    assert (np.asarray(stB["pos"]) == 8).all()
+    assert not np.asarray(stB["active"]).any(), "done not latched in-graph"
+    streamB = np.concatenate([t1[:, :4], np.asarray(toksB2)[:, :4]], axis=1)
+    np.testing.assert_array_equal(streamB, streamA)
+
+
+def test_block_table_evict_readmit_invalidation():
+    """Evict -> re-admit must invalidate the cached block-table row: without
+    invalidation the re-admitted slot would read a reclaimed physical page
+    (stale slot); with it the cache stays coherent with the wait-free
+    lookup at every step."""
+    n_pages, B, page_size, maxP = 16, 2, 2, 4
+    table = PT.create_table(n_pages)
+    seq = jnp.arange(B, dtype=jnp.int32)
+    bt = jnp.full((B, maxP), -1, jnp.int32)
+    for pos in range(6):
+        (table, ws, ab), bt = PT.alloc_step_incremental(
+            table, seq, jnp.full((B,), pos, jnp.int32), bt,
+            page_size=page_size)
+        assert (np.asarray(ws) >= 0).all() and not np.asarray(ab).any()
+    stale_row = np.asarray(bt[0]).copy()
+    assert (stale_row[:3] >= 0).all()
+    # evict lane 0; its pages become tombstones, immediately reclaimable
+    table = PT.free_sequences(table, seq, jnp.full((B,), 6, jnp.int32),
+                              page_size=page_size, max_pages=maxP,
+                              active=jnp.asarray([True, False]))
+    bt = PT.invalidate_block_rows(bt, jnp.asarray([True, False]))
+    assert (np.asarray(bt[0]) == -1).all()
+    assert (np.asarray(bt[1]) == np.asarray(
+        PT.rebuild_block_table(table, seq, maxP))[1]).all()
+    # re-admit lane 0 with a fresh sequence id; had the stale row survived,
+    # verify_block_table would flag it as soon as its pages went live
+    seq = seq.at[0].set(B)
+    stale_bt = bt.at[0].set(jnp.asarray(stale_row))
+    for pos in range(6):
+        p = jnp.full((B,), pos, jnp.int32)
+        (table, ws, ab), bt = PT.alloc_step_incremental(
+            table, seq, p, bt, page_size=page_size)
+        assert (np.asarray(ws) >= 0).all() and not np.asarray(ab).any()
+        assert int(PT.verify_block_table(table, seq, p, bt,
+                                         page_size=page_size)) == 0
+    # the hazard is real: the un-invalidated row disagrees with the lookup
+    assert int(PT.verify_block_table(
+        table, seq, jnp.full((B,), 0, jnp.int32), stale_bt,
+        page_size=page_size)) > 0
+
+
+def test_block_table_matches_wait_free_lookup_under_churn():
+    """CI verification mode under allocator churn (admit / decode / evict /
+    reclaim): the incremental cache equals the authoritative wait-free
+    lookup after every step, while probing ~page_size x fewer keys."""
+    n_pages, B, page_size, maxP = 64, 4, 4, 8
+    rng = np.random.default_rng(0)
+    table = PT.create_table(n_pages)
+    seq = np.arange(B, dtype=np.int32)
+    pos = np.zeros(B, np.int32)
+    next_id = B
+    bt = jnp.full((B, maxP), -1, jnp.int32)
+    PT.probe_stats_reset()
+    for round_ in range(40):
+        (table, ws, ab), bt = PT.alloc_step_incremental(
+            table, jnp.asarray(seq), jnp.asarray(pos), bt,
+            page_size=page_size)
+        assert not np.asarray(ab).any()
+        pos += 1
+        assert int(PT.verify_block_table(
+            table, jnp.asarray(seq), jnp.asarray(pos - 1), bt,
+            page_size=page_size)) == 0
+        if round_ % 7 == 6:                 # evict a random lane, re-admit
+            v = int(rng.integers(B))
+            mask = np.zeros(B, bool)
+            mask[v] = True
+            table = PT.free_sequences(
+                table, jnp.asarray(seq), jnp.asarray(pos),
+                page_size=page_size, max_pages=maxP,
+                active=jnp.asarray(mask))
+            bt = PT.invalidate_block_rows(bt, jnp.asarray(mask))
+            seq[v] = next_id
+            next_id += 1
+            pos[v] = 0
+            bt = jnp.where(jnp.asarray(mask)[:, None],
+                           PT.rebuild_block_table(table, jnp.asarray(seq),
+                                                  maxP), bt)
+            assert int(PT.verify_block_table(
+                table, jnp.asarray(seq), jnp.asarray(pos), bt,
+                page_size=page_size)) == 0
+
+
+def test_batcher_megastep_churn():
+    """End-to-end continuous batching on megasteps with the CI block-table
+    verification enabled: evictions + re-admissions over several rounds,
+    cache never diverges, one host sync per K tokens."""
+    from repro.launch.serve import ContinuousBatcher
+    cfg = get_smoke_config("qwen2.5-32b")
+    model = get_model(cfg)
+    params, _ = model.init(cfg, jax.random.PRNGKey(0))
+    srv = ContinuousBatcher(cfg, params, batch=4, max_len=24, page_size=4,
+                            megastep_k=4, verify_block_table=True)
+    for _ in range(8):
+        srv.decode_round(8)
+    assert srv.evictions > 0
+    st = srv.table_stats()
+    assert int(st.live_pages) + int(st.tombstones) <= \
+        srv.state["pools"].k.shape[1]
+
+
 def test_page_allocator_tombstone_reuse():
     """Evicted sequences' page slots are re-claimed in place: after heavy
     churn, live+tombstone occupancy stays bounded and allocation never
