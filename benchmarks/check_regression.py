@@ -29,8 +29,10 @@ import sys
 # residuals (BLAS/ISA-dependent; correctness is gated by the pytest suite).
 # "tok_s": decode megastep tokens/s — wall-clock like Mops.  The decode
 # probes_per_token_* / probe_reduction_x counts are deterministic replays
-# and stay GATED.
-NOISY_MARKERS = ("Mops", "max_err", "tok_s")
+# and stay GATED; so are the scheduler storm's abort/avoided/preemption
+# counts (virtual-clock).  The scheduler queue-wait / TTFT percentiles are
+# report-only per ISSUE 5 ("queue_wait" / "ttft" markers).
+NOISY_MARKERS = ("Mops", "max_err", "tok_s", "queue_wait", "ttft")
 
 
 def flatten(tree, prefix="", out=None):

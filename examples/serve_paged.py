@@ -1,6 +1,8 @@
 """Serve a small model with batched requests through the paged engine:
-continuous batching, sequence eviction, tombstone-reuse page recycling, and
-a correctness check of decode-vs-forward on one request stream.
+continuous batching under the SLO-aware scheduler, chunked-prefill
+admission, sequence eviction, tombstone-reuse page recycling, proactive
+headroom control, and a correctness check of decode-vs-forward on one
+request stream.
 
 Run: PYTHONPATH=src python examples/serve_paged.py
 """
@@ -12,6 +14,7 @@ from repro.configs import get_smoke_config
 from repro.launch.serve import ContinuousBatcher
 from repro.models.registry import get_model
 from repro.serving import engine as EG
+from repro.serving.sched import Scheduler, synthetic_workload
 
 cfg = get_smoke_config("qwen2.5-32b")
 model = get_model(cfg)
@@ -40,6 +43,29 @@ for r in range(6):
     print(f"   round {r}: evictions={srv.evictions:3d} "
           f"live={int(st.live_pages):3d} tombs={int(st.tombstones):3d} "
           f"occupancy={float(st.occupancy):.3f}")
-final = srv.table_stats()
-assert float(final.occupancy) < 1.0, "allocator should never fill up"
+assert srv.sched.stats.aborts == 0, "proactive batcher should never abort"
 print("[example] serve_paged OK — pages recycled in place, no rebuild")
+
+print("[example] SLO-aware scheduling on an OVERCOMMITTED pool (the "
+      "forecaster keeps the allocator out of ABORT)")
+sched = Scheduler(slots=4, page_size=8, max_len=48, megastep_k=4,
+                  policy="deadline", proactive=True)
+wl = synthetic_workload(12, vocab_size=cfg.vocab_size, max_len=48, seed=0,
+                        slo_fraction=0.5, arrival_every=2)
+srv2 = ContinuousBatcher(cfg, params, batch=4, max_len=48, page_size=8,
+                         megastep_k=4, scheduler=sched,
+                         n_pages=14,           # < half the worst-case plan
+                         auto_refill=False, verify_block_table=True)
+sched.submit_many(wl)
+assert srv2.run_until_drained(max_rounds=400), "workload did not drain"
+s = sched.stats
+print(f"   completed={s.completed} aborts={s.aborts} "
+      f"aborts_avoided={s.aborts_avoided} grows={s.pool_grows} "
+      f"preempted={s.preemptive_evictions} "
+      f"deadline_misses={s.deadline_misses}")
+lat = sched.latency_summary()
+print(f"   queue_wait p50/p99 = {lat['queue_wait_p50']:.0f}/"
+      f"{lat['queue_wait_p99']:.0f} steps, "
+      f"ttft p50/p99 = {lat['ttft_p50']:.0f}/{lat['ttft_p99']:.0f} steps")
+assert s.completed == 12 and s.aborts == 0
+print("[example] scheduler OK — zero ABORTs on an overcommitted pool")

@@ -200,6 +200,45 @@ def decode_manual_tp(cfg, rules) -> int:
     return rules.mesh.shape["model"]
 
 
+def decode_ssm_tp(cfg, tp: int) -> bool:
+    """Whether the hybrid family's Mamba decode math shards over ``model``
+    inside the fused region (ROADMAP item: it used to run as replicated
+    redundant compute on every chip).  Shape gate: the per-head dims split
+    over the existing ``ssm_inner``/``ssm_heads`` rules when the B/C
+    streams are shared (``ssm_groups == 1`` — both assigned SSM archs) and
+    the head count divides the TP width; otherwise the backbone stays
+    replicated (still correct, just redundant).  ``tp == 1`` passes so
+    single-process CPU tests cover the sharded code path (psum over a
+    1-wide axis is the identity)."""
+    if tp < 1 or cfg.ssm_state <= 0 or cfg.ssm_heads <= 0:
+        return False                 # no SSM stack at all
+    if cfg.ssm_groups != 1:
+        return False                 # grouped B/C: head shard splits groups
+    Hg = cfg.ssm_heads // cfg.ssm_groups
+    return Hg % tp == 0 and cfg.d_inner % tp == 0
+
+
+def _mamba_param_specs():
+    """shard_map in_specs for STACKED mamba layer params (leading dim is the
+    layer scan) inside the fused decode region, sharded per the
+    ``ssm_inner``/``ssm_heads`` rules: per-head outputs column-parallel
+    over ``model``, the shared B/C streams replicated, ``w_out``
+    row-parallel."""
+    return {
+        "w_z": P(None, None, "model"),       # [L, d, di]
+        "w_x": P(None, None, "model"),
+        "w_bc": P(),                          # shared B/C streams (G == 1)
+        "w_dt": P(None, None, "model"),      # [L, d, H]
+        "conv_x_w": P(None, None, "model"),  # [L, W, di]
+        "conv_x_b": P(None, "model"),
+        "conv_bc_w": P(), "conv_bc_b": P(),
+        "A_log": P(None, "model"), "dt_bias": P(None, "model"),
+        "D": P(None, "model"),
+        "norm": P(None, "model"),
+        "w_out": P(None, "model", None),     # [L, di, d] row-parallel
+    }
+
+
 def decode_megastep_mode(cfg, rules, K: int) -> str:
     """Bookkeeping tag for the decode megastep (``serving/engine.
     make_serve_megastep``), recorded in dry-run artifacts next to
@@ -214,7 +253,7 @@ def decode_megastep_mode(cfg, rules, K: int) -> str:
 
 
 def decode_param_specs(cfg, params, *, vocab_sharded: bool,
-                       kv_rep: int = 1):
+                       kv_rep: int = 1, ssm_tp: bool = False):
     """shard_map in_specs (prefix pytree) for the fused manual decode region:
     stacked layer weights column/row-parallel over ``model`` (leading dim is
     the layer scan), everything else replicated.  ``vocab_sharded`` shards
@@ -226,9 +265,10 @@ def decode_param_specs(cfg, params, *, vocab_sharded: bool,
     head in-region, which keeps the spec divisible without materialising a
     tiled weight copy per step.
 
-    ``hybrid``: the Mamba backbone runs replicated (redundant identical
-    compute on every chip — the model axis carries no SSM work at decode);
-    only the ONE shared (attention + MLP) block is Megatron-sharded."""
+    ``hybrid``: the ONE shared (attention + MLP) block is Megatron-sharded;
+    the Mamba backbone shards its per-head dims over ``model`` when
+    ``ssm_tp`` (gate ``decode_ssm_tp`` — the ssm_inner/ssm_heads rules) and
+    runs replicated (redundant identical compute) otherwise."""
     kvw = P() if kv_rep > 1 else P(None, None, "model", None)
     kvb = P() if kv_rep > 1 else P(None, "model", None)
     if cfg.family == "hybrid":
@@ -244,6 +284,8 @@ def decode_param_specs(cfg, params, *, vocab_sharded: bool,
             "attn": sh_attn, "ln1": P(), "ln2": P(),
             "mlp": {"wi_gate": P(None, "model"), "wi_up": P(None, "model"),
                     "wo": P("model", None)}}
+        if ssm_tp:
+            specs["layers"] = {"mamba": _mamba_param_specs(), "ln": P()}
         return specs
     h = P(None, None, "model", None)                 # [L, d, H, hd]
     attn = {"wq": h, "wk": kvw, "wv": kvw,

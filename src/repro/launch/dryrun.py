@@ -164,6 +164,14 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
         # the fused region applied, never a quiet fallback (--expect-fused)
         meta["decode_tp"] = "manual-fused" if fused else "gspmd"
         meta["megastep"] = megastep_tag
+        if cfg.family == "hybrid":
+            # whether the mamba backbone lowered HEAD-SHARDED over model
+            # (decode_ssm_tp) or as replicated redundant compute
+            from repro.dist import tp as TP
+            meta["mamba_tp"] = (
+                "sharded-model" if fused
+                and TP.decode_ssm_tp(cfg, mesh.shape["model"])
+                else "replicated")
     return cfg, shape, lowered, compiled, meta
 
 
@@ -209,6 +217,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str,
         if "decode_tp" in meta:
             rec["decode_tp"] = meta["decode_tp"]
             rec["megastep"] = meta["megastep"]
+            if "mamba_tp" in meta:
+                rec["mamba_tp"] = meta["mamba_tp"]
         if verbose:
             print(f"[{tag}] compiled in {t_compile:.0f}s  "
                   f"flops/chip={rl.hlo_flops_per_chip:.3e}  "

@@ -1,25 +1,36 @@
-"""Serving driver: continuous batching over the paged engine.
+"""Serving driver: continuous batching over the paged engine, scheduled by
+``repro.serving.sched``.
 
-Demonstrates the paper's table as the page allocator under realistic churn:
-sequences arrive, decode for a while, finish, get EVICTED (delete -> pages
-become tombstones), and new sequences immediately RECLAIM those page slots
-(tombstone reuse — Proposition 2 as a memory allocator).  The pool never
-needs compaction; occupancy stays bounded by live pages.
+The driver is deliberately THIN: it owns the engine state and the megastep
+dispatch (plus the reactive refused-suffix re-issue safety net); every
+admit / evict / preempt / grow decision lives in the scheduler.  One round:
 
-The decode loop is driven in MEGASTEPS (``engine.make_serve_megastep``):
-one jitted dispatch produces K greedy tokens (sampling in-graph), so the
-host syncs once per K tokens instead of once per token.  Done lanes latch
-``active=False`` in-graph via ``stop_len``; a lane whose page allocation
-ABORTs freezes (pos + pending token) and, after the Section 4.3 rebuild,
-the next megastep re-issues the refused suffix automatically — the refused
-token is still the lane's pending feed.  Eviction/re-admission is one
-vectorized host pass per megastep; evicted lanes' block-table rows are
-invalidated and re-admitted rows rebuilt from the authoritative wait-free
-lookup (the incremental cache never survives a seq-id change).
+1. build the per-lane teacher-forcing arrays (chunked prefill: a lane whose
+   request is still consuming its prompt gets its next <=K prompt tokens
+   forced inside the SAME megastep budget the decoding lanes sample under);
+2. dispatch ONE K-token megastep (``engine.make_serve_megastep``) — the
+   host syncs once per K tokens;
+3. absorb the sampled tokens into their requests (TTFT accounting) and, in
+   CI mode, verify the incremental block-table cache against the wait-free
+   lookup;
+4. reactive safety net: if any lane ABORTed (forecaster off / capped), run
+   the Section 4.3 rebuild into a 2x pool — the frozen pending token means
+   the refused suffix re-issues automatically next round;
+5. ask the scheduler for the round's Plan (completions, admissions,
+   preemptions, proactive growth) and apply it to the engine state:
+   ``free_sequences`` + block-row invalidation for evicted lanes,
+   ``rebuild_page_table`` for proactive growth (BEFORE the next dispatch —
+   the allocator never aborts and the wait-free read path never sees a
+   mid-flight rebuild), fresh sequence ids at position 0 for admissions.
+
+With ``Scheduler(proactive=False)`` the driver degenerates to the old
+reactive batcher (admit greedily, rebuild after the abort) — the baseline
+the adversarial churn tests compare against.
 
 Usage (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b --smoke \
-      --rounds 6 --batch 4 --max-len 48 --megastep 4
+      --rounds 6 --batch 4 --max-len 48 --megastep 4 --policy deadline \
+      --requests 24 --verify-block-table --fail-on-abort
 """
 from __future__ import annotations
 
@@ -33,35 +44,67 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models.registry import get_model
 from repro.serving import engine as EG
 from repro.serving import page_table as PT
+from repro.serving.sched import (Scheduler, churn_request,
+                                 synthetic_workload)
 
 
 class ContinuousBatcher:
-    """Slot-based continuous batching: B decode slots; finished sequences
-    are evicted (pages freed) and their slot re-admitted with a fresh
-    sequence id.  ``megastep_k`` tokens are decoded per dispatch;
-    ``verify_block_table=True`` (CI-only) checks the incremental
-    block-table cache against the wait-free lookup after every megastep."""
+    """Thin driver: B decode slots, one K-token megastep per round, all
+    policy in ``scheduler``.  ``n_pages`` overcommits the page pool (the
+    scheduler's headroom controller keeps it out of ABORT); ``auto_refill``
+    reproduces the endless eviction-churn stream of the old batcher when no
+    explicit workload is submitted."""
 
     def __init__(self, cfg, params, *, batch: int, max_len: int,
                  page_size: int, rules=None, seed: int = 0,
-                 megastep_k: int = 1, verify_block_table: bool = False):
+                 megastep_k: int = 1, verify_block_table: bool = False,
+                 scheduler: Scheduler | None = None,
+                 n_pages: int | None = None, auto_refill: bool = True):
         self.cfg, self.params = cfg, params
         self.B, self.max_len, self.page_size = batch, max_len, page_size
         self.K = max(1, int(megastep_k))
         self.verify = verify_block_table
+        self.auto_refill = auto_refill
         self.state, _ = EG.make_decode_state(cfg, batch, S_max=max_len,
                                              rules=rules,
-                                             page_size=page_size)
+                                             page_size=page_size,
+                                             n_pages=n_pages)
+        self.state["active"] = jnp.zeros((batch,), bool)  # no lanes seated
         self.mega_fn = jax.jit(EG.make_serve_megastep(
             cfg, S_max=max_len, K=self.K, rules=rules, page_size=page_size))
+        pool = EG.decode_headroom(self.state)
+        self.sched = scheduler or Scheduler(
+            slots=batch, page_size=page_size, max_len=max_len,
+            megastep_k=self.K)
+        self.sched.K = self.K
+        self.sched.n_pages = None if pool is None else pool.n_pages
         self.pos = np.zeros(batch, np.int32)
-        self.lengths = np.random.default_rng(seed).integers(
-            max_len // 3, max_len - 1, size=batch)
+        self.tokens = jnp.zeros((batch, 1), jnp.int32)
         self.next_seq_id = batch
         self.rng = np.random.default_rng(seed + 1)
-        self.evictions = 0
-        self.rebuilds = 0
-        self.tokens = jnp.zeros((batch, 1), jnp.int32)
+        self._next_auto_id = 1 << 20          # ids disjoint from workloads
+        # per-lane teacher-forcing view (set at admission)
+        self.lane_known = [np.zeros((0,), np.int32)] * batch
+        self.lane_stop = np.zeros(batch, np.int32)
+
+    # -- compat conveniences ---------------------------------------------
+
+    @property
+    def evictions(self) -> int:
+        return (self.sched.stats.completed
+                + self.sched.stats.preemptive_evictions)
+
+    @property
+    def rebuilds(self) -> int:
+        return (self.sched.stats.pool_grows
+                + self.sched.stats.reactive_rebuilds)
+
+    def table_stats(self):
+        if "table" not in self.state:
+            return None
+        return PT.stats(self.state["table"])
+
+    # -- the round --------------------------------------------------------
 
     def _check_block_table(self):
         mism = int(PT.verify_block_table(
@@ -73,105 +116,268 @@ class ContinuousBatcher:
                 f"block-table cache diverged from the wait-free lookup "
                 f"({mism} entries) — invalidation/update invariant broken")
 
-    def decode_round(self, steps: int):
-        maxP = -(-self.max_len // self.page_size)
-        for _ in range(-(-steps // self.K)):
-            toks, self.state = self.mega_fn(
-                self.params, self.state, self.tokens,
-                jnp.asarray(self.lengths, jnp.int32))
-            # the engine is the source of truth: refused lanes' pos did NOT
-            # advance and toks[:, -1] is their still-pending refused token
-            self.tokens = toks[:, -1:]
-            self.pos = np.asarray(self.state["pos"]).copy()  # 1 sync per K
-            if self.verify and "table" in self.state:
-                self._check_block_table()
-            aborted = self.state.get("aborted")
-            if aborted is not None and bool(np.asarray(aborted).any()):
-                # the Section 4.3 path, live: grow the pool, re-hash, move
-                # the KV pages along, rebuild the block-table cache, clear
-                # the flags; the refused suffix is re-issued by the next
-                # megastep at the frozen positions
-                n_pages = self.state["pools"].k.shape[1]
-                self.state = EG.rebuild_page_table(self.state,
-                                                   n_pages=n_pages * 2)
-                self.rebuilds += 1
-            self._evict_and_readmit(maxP)
+    def _refill(self):
+        """Endless-churn mode: keep the queue deep enough that every free
+        slot can re-admit (the old batcher's workload, as Requests)."""
+        sch = self.sched
+        deficit = self.B - len(sch.running()) - len(sch.queue)
+        for _ in range(max(deficit, 0)):
+            sch.submit(churn_request(self._next_auto_id, self.rng,
+                                     vocab_size=self.cfg.vocab_size,
+                                     max_len=self.max_len))
+            self._next_auto_id += 1
 
-    def _evict_and_readmit(self, maxP: int):
-        """One vectorized pass: evict every finished slot (their pages
-        become tombstones, their cached block-table rows are invalidated)
-        and re-admit a fresh sequence in place."""
-        done = self.pos >= self.lengths
-        n = int(done.sum())
-        if not n:
-            return
-        dmask = jnp.asarray(done)
-        if "table" in self.state:
+    def _forcing(self):
+        """Teacher-forcing arrays for this round: chunked prefill shares
+        the megastep budget with decode (see engine._mega_scan)."""
+        B, K = self.B, self.K
+        forced = np.zeros((B, K), np.int32)
+        fmask = np.zeros((B, K), bool)
+        for s, req in enumerate(self.sched.lanes):
+            if req is None:
+                continue
+            known = self.lane_known[s]
+            p0 = int(self.pos[s])
+            for k in range(K):
+                sp = p0 + k + 1
+                if sp < known.size:
+                    forced[s, k] = known[sp]
+                    fmask[s, k] = True
+        return forced, fmask
+
+    def _absorb(self, toks: np.ndarray, p0: np.ndarray, p1: np.ndarray):
+        """Fold the round's sampled tokens back into their requests.
+        ``toks[s, k]`` is the token at sequence position ``p0[s]+k+1``;
+        positions below the lane's known length were forced (prompt), at or
+        above it they are model samples."""
+        clk = self.sched.clock
+        for s, req in enumerate(self.sched.lanes):
+            if req is None:
+                continue
+            nk = self.lane_known[s].size
+            stop = int(self.lane_stop[s])
+            for k in range(int(p1[s]) - int(p0[s])):
+                sp = int(p0[s]) + k + 1
+                if nk <= sp < stop:
+                    req.sampled.append(int(toks[s, k]))
+                    if req.first_token_at is None:
+                        req.first_token_at = clk
+
+    def _apply_plan(self, plan):
+        st = self.sched
+        evict = plan.evict_slots
+        if evict and "table" in self.state:
+            mask = np.zeros(self.B, bool)
+            mask[evict] = True
+            dmask = jnp.asarray(mask)
+            maxP = -(-self.max_len // self.page_size)
             self.state["table"] = PT.free_sequences(
                 self.state["table"], self.state["seq_ids"],
                 jnp.asarray(self.pos), page_size=self.page_size,
                 max_pages=maxP, active=dmask)
             self.state["block_table"] = PT.invalidate_block_rows(
                 self.state["block_table"], dmask)
-        seq_ids = np.asarray(self.state["seq_ids"]).copy()
-        seq_ids[done] = self.next_seq_id + np.arange(n, dtype=seq_ids.dtype)
-        self.next_seq_id += n
-        self.pos[done] = 0
-        self.lengths[done] = self.rng.integers(
-            self.max_len // 3, self.max_len - 1, size=n)
-        self.evictions += n
-        self.state["seq_ids"] = jnp.asarray(seq_ids)
-        self.state["pos"] = jnp.asarray(self.pos)
-        # re-admitted slots decode again (done lanes latched inactive
-        # in-graph via stop_len).  Admissions here start at pos 0 with no
-        # pages, so the invalidated (-1) rows above ARE the correct cache;
-        # an admission that brought prefilled pages would instead rebuild
-        # its rows from the authoritative lookup (PT.rebuild_block_table)
-        self.state["active"] = jnp.asarray(self.state["active"]) | dmask
+        if evict:
+            active = np.asarray(self.state["active"]).copy()
+            active[evict] = False
+            self.state["active"] = jnp.asarray(active)
+        if plan.grow_to is not None and "table" in self.state:
+            # PROACTIVE Section 4.3 rebuild: before the abort, between
+            # megasteps — the wait-free read path never sees it mid-flight
+            self.state = EG.rebuild_page_table(self.state,
+                                               n_pages=plan.grow_to)
+        if plan.admissions:
+            seq_ids = np.asarray(self.state["seq_ids"]).copy()
+            active = np.asarray(self.state["active"]).copy()
+            aborted = np.asarray(self.state["aborted"]).copy()
+            tokens = np.asarray(self.tokens).copy()
+            self._reset_recurrent_state([s for s, _ in plan.admissions])
+            for slot, req in plan.admissions:
+                known = req.known_tokens()
+                self.lane_known[slot] = known
+                self.lane_stop[slot] = st.stop_of(req)
+                seq_ids[slot] = self.next_seq_id
+                self.next_seq_id += 1
+                self.pos[slot] = 0
+                active[slot] = True
+                aborted[slot] = False
+                tokens[slot, 0] = known[0]
+                # fresh admissions start at pos 0 with no pages, so the
+                # invalidated (-1) block-table rows ARE the correct cache;
+                # an admission carrying prefilled pages would rebuild its
+                # rows from the wait-free lookup (PT.rebuild_block_table)
+            self.state["seq_ids"] = jnp.asarray(seq_ids)
+            self.state["active"] = jnp.asarray(active)
+            self.state["aborted"] = jnp.asarray(aborted)
+            self.state["pos"] = jnp.asarray(self.pos)
+            self.tokens = jnp.asarray(tokens)
 
-    def table_stats(self):
-        if "table" not in self.state:
-            return None
-        return PT.stats(self.state["table"])
+    def _reset_recurrent_state(self, slots):
+        """Zero the admitted lanes' PER-LANE recurrent state.  Paged KV
+        needs nothing (freed pages are unreachable once the block-table
+        rows are invalidated), but the SSM recurrence (mamba ``h`` / conv
+        tails) and the ring buffers carry the previous occupant's history
+        in-place — a re-seated request must start from the same zero state
+        a fresh ``make_decode_state`` would give it, or its decode (and the
+        'lossless recompute preemption' invariant) is silently wrong."""
+        adm = np.zeros(self.B, bool)
+        adm[slots] = True
+        amask = jnp.asarray(adm)
+
+        def rows(t, batch_dim, fill):
+            shape = [1] * t.ndim
+            shape[batch_dim] = -1
+            return jnp.where(amask.reshape(shape),
+                             jnp.full_like(t, fill), t)
+
+        if "ssm" in self.state:
+            self.state["ssm"] = jax.tree.map(
+                lambda t: rows(t, 1, 0), self.state["ssm"])
+        if "ring_k" in self.state:
+            self.state["ring_k"] = rows(self.state["ring_k"], 1, 0)
+            self.state["ring_v"] = rows(self.state["ring_v"], 1, 0)
+            self.state["ring_pos"] = rows(self.state["ring_pos"], 0, -1)
+
+    def step_round(self):
+        """One scheduled megastep round (K tokens per occupied lane)."""
+        if self.auto_refill:
+            self._refill()
+        with PT.probe_stats_scope() as ps:
+            forced, fmask = self._forcing()
+            p0 = self.pos.copy()
+            toks, self.state = self.mega_fn(
+                self.params, self.state, self.tokens,
+                jnp.asarray(self.lane_stop), jnp.asarray(forced),
+                jnp.asarray(fmask))
+            self.tokens = toks[:, -1:]       # pending feed (refused token
+            self.pos = np.asarray(self.state["pos"]).copy()  # for aborts)
+            self.sched.advance(self.K)       # 1 host sync per K tokens
+            self._absorb(np.asarray(toks), p0, self.pos)
+            if self.verify and "table" in self.state:
+                self._check_block_table()
+            aborted = self.state.get("aborted")
+            n_ab = (0 if aborted is None
+                    else int(np.asarray(aborted).sum()))
+            if n_ab:
+                # REACTIVE safety net (forecaster off / capped / wrong):
+                # grow the pool, re-hash, move the KV pages, rebuild the
+                # block-table cache, clear the flags; the refused suffix is
+                # re-issued by the next megastep at the frozen positions
+                n_pages = self.state["pools"].k.shape[1]
+                self.state = EG.rebuild_page_table(self.state,
+                                                   n_pages=n_pages * 2)
+                self.sched.note_aborts(n_ab, grew_to=n_pages * 2)
+            plan = self.sched.plan_round(self.pos,
+                                         EG.decode_headroom(self.state))
+            self._apply_plan(plan)
+            probed = ps["keys_probed"]
+        self.sched.end_round(keys_probed=probed)
+        return plan
+
+    def decode_round(self, steps: int):
+        """Drive ~``steps`` decode steps (ceil(steps / K) rounds)."""
+        for _ in range(-(-steps // self.K)):
+            self.step_round()
+
+    def run_until_drained(self, max_rounds: int = 1000) -> bool:
+        """Run until every submitted request completed (requires
+        ``auto_refill=False``).  Returns True when drained."""
+        for _ in range(max_rounds):
+            if self.sched.drained:
+                return True
+            self.step_round()
+        return self.sched.drained
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-32b", choices=sorted(ARCH_IDS))
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--rounds", type=int, default=6,
+                    help="print intervals (endless churn) or max run length"
+                         " x steps-per-round (fixed workload)")
     ap.add_argument("--steps-per-round", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=48)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--megastep", type=int, default=4,
                     help="tokens per dispatch (K of make_serve_megastep)")
+    ap.add_argument("--policy", default="fcfs",
+                    choices=["fcfs", "priority", "deadline"])
+    ap.add_argument("--requests", type=int, default=0,
+                    help="fixed synthetic workload size (0 = endless churn)")
+    ap.add_argument("--arrival-every", type=int, default=0,
+                    help="stagger arrivals by N steps (0 = storm)")
+    ap.add_argument("--slo-fraction", type=float, default=0.5,
+                    help="fraction of workload requests carrying an SLO")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="pool size factor vs the worst-case plan (<1 "
+                         "overcommits; the headroom controller compensates)")
+    ap.add_argument("--no-proactive", action="store_true",
+                    help="disable the forecaster/headroom controller "
+                         "(reactive baseline: abort -> rebuild)")
+    ap.add_argument("--fail-on-abort", action="store_true",
+                    help="CI soak: exit non-zero if any allocator ABORT "
+                         "surfaced")
     ap.add_argument("--verify-block-table", action="store_true",
                     help="CI/debug: check the incremental block-table "
                          "cache against the wait-free lookup every round")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
     params, _ = model.init(cfg, jax.random.PRNGKey(0))
+
+    maxP = -(-args.max_len // args.page_size)
+    default_pool = int(args.batch * maxP * 1.25) + 1
+    n_pages = max(maxP, int(default_pool * args.overcommit))
+    sched = Scheduler(slots=args.batch, page_size=args.page_size,
+                      max_len=args.max_len, megastep_k=args.megastep,
+                      policy=args.policy,
+                      proactive=not args.no_proactive)
+    fixed = args.requests > 0
     srv = ContinuousBatcher(cfg, params, batch=args.batch,
                             max_len=args.max_len, page_size=args.page_size,
                             megastep_k=args.megastep,
-                            verify_block_table=args.verify_block_table)
+                            verify_block_table=args.verify_block_table,
+                            scheduler=sched, n_pages=n_pages,
+                            auto_refill=not fixed, seed=args.seed)
+    if fixed:
+        sched.submit_many(synthetic_workload(
+            args.requests, vocab_size=cfg.vocab_size, max_len=args.max_len,
+            seed=args.seed, slo_fraction=args.slo_fraction,
+            arrival_every=args.arrival_every))
+
     for r in range(args.rounds):
         srv.decode_round(args.steps_per_round)
         st = srv.table_stats()
-        if st is not None:
-            print(f"[serve] round {r}: evictions={srv.evictions} "
-                  f"rebuilds={srv.rebuilds} "
-                  f"live_pages={int(st.live_pages)} "
-                  f"tombstones={int(st.tombstones)} "
-                  f"occupancy={float(st.occupancy):.3f}")
-        else:
-            print(f"[serve] round {r}: evictions={srv.evictions} "
-                  f"(attention-free arch: no page table)")
+        s = sched.stats
+        occ = ("" if st is None else
+               f" live_pages={int(st.live_pages)} "
+               f"tombs={int(st.tombstones)} "
+               f"occupancy={float(st.occupancy):.3f}")
+        print(f"[serve] round {r}: done={s.completed} "
+              f"preempted={s.preemptive_evictions} queue={len(sched.queue)} "
+              f"aborts={s.aborts} avoided={s.aborts_avoided} "
+              f"grows={s.pool_grows}{occ}")
+        if fixed and sched.drained:
+            break
+
+    summary = sched.summary()
+    print(f"[serve] summary ({sched.policy.name}, "
+          f"{'proactive' if sched.proactive else 'reactive'}): "
+          + " ".join(f"{k}={v:.0f}" if isinstance(v, float) else f"{k}={v}"
+                     for k, v in summary.items()))
     print(f"[serve] done — megastep K={srv.K}: host synced once per K "
           "tokens; page slots were reused in place (no compaction)")
+    if fixed and not sched.drained:
+        print("[serve] FAIL: workload not drained")
+        return 1
+    if args.fail_on_abort and sched.stats.aborts:
+        print(f"[serve] FAIL: {sched.stats.aborts} allocator ABORT(s) "
+              "surfaced (--fail-on-abort)")
+        return 1
     return 0
 
 

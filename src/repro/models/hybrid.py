@@ -22,18 +22,22 @@ def num_shared_invocations(cfg) -> int:
     return cfg.num_layers // cfg.shared_attn_every
 
 
-def mamba_decode_chunk(cfg, layer_params, states, x, lo: int, hi: int):
+def mamba_decode_chunk(cfg, layer_params, states, x, lo: int, hi: int,
+                       tp_axis: str | None = None):
     """One-token decode through mamba layers [lo, hi): x [B,1,d] ->
-    (x', states' for the chunk).  Pure per-lane jnp — the fused manual-TP
-    serve step runs it replicated on every chip (identical redundant
-    compute), the gspmd step runs it as-is."""
+    (x', states' for the chunk).  Pure per-lane jnp.  The gspmd step runs
+    it as-is; the fused manual-TP serve step passes ``tp_axis="model"``
+    when ``dist/tp.decode_ssm_tp`` applies — params/state arrive sharded
+    over ``ssm_inner``/``ssm_heads`` and each chip computes only its head
+    slice (row-parallel out + RMS psum inside ``mamba_decode_step``) —
+    and falls back to replicated redundant compute otherwise."""
     chunk_p = jax.tree.map(lambda t: t[lo:hi], layer_params)
     chunk_s = jax.tree.map(lambda t: t[lo:hi], states)
 
     def body(x, xs):
         lp, st = xs
         h, st2 = ssm.mamba_decode_step(
-            lp["mamba"], nn.rmsnorm(lp["ln"], x), cfg, st)
+            lp["mamba"], nn.rmsnorm(lp["ln"], x), cfg, st, tp_axis=tp_axis)
         return x + h, st2
 
     x, s2 = jax.lax.scan(body, x, (chunk_p, chunk_s),

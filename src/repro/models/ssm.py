@@ -139,12 +139,29 @@ def ssd_chunked(x, dt, A, Bm, Cm, D, *, chunk: int, h0=None):
     return y, h_fin
 
 
-def _gate_norm_out(p, y, z, x_dtype):
-    """Mamba2 gated RMSNorm + out projection.  y,z [B,S,di]."""
+def _gate_norm_out(p, y, z, x_dtype, *, tp_axis=None, di_full=None):
+    """Mamba2 gated RMSNorm + out projection.  y,z [B,S,di].
+
+    ``tp_axis`` (inside a manual shard_map region): y/z/norm/w_out carry a
+    LOCAL ``di`` shard — the RMS statistic is completed with a psum over the
+    full inner width ``di_full`` and the row-parallel out projection psums
+    its partial products (Megatron row-parallel over the SSM inner dim)."""
     y = y * jax.nn.silu(z.astype(jnp.float32))
-    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    if tp_axis is None:
+        var = jnp.mean(y * y, axis=-1, keepdims=True)
+    else:
+        var = jax.lax.psum(jnp.sum(y * y, axis=-1, keepdims=True),
+                           tp_axis) / di_full
     y = (y * jax.lax.rsqrt(var + 1e-6)).astype(x_dtype) * p["norm"]
-    return jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    if tp_axis is None:
+        return jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    # row-parallel: accumulate the partial products in f32 and round ONCE
+    # after the psum — rounding bf16 partials per shard would diverge from
+    # the replicated path's single post-sum rounding, and the SSM
+    # recurrence amplifies ulp-level drift across decode steps
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"],
+                     preferred_element_type=jnp.float32)
+    return jax.lax.psum(out, tp_axis).astype(y.dtype)
 
 
 def mamba_forward(p, x, cfg, *, state: MambaState | None = None,
@@ -185,11 +202,25 @@ def mamba_forward(p, x, cfg, *, state: MambaState | None = None,
     return out
 
 
-def mamba_decode_step(p, x, cfg, state: MambaState) -> Tuple[jnp.ndarray, MambaState]:
-    """One-token decode.  x [B,1,d] -> ([B,1,d], state')."""
+def mamba_decode_step(p, x, cfg, state: MambaState, *,
+                      tp_axis: str | None = None
+                      ) -> Tuple[jnp.ndarray, MambaState]:
+    """One-token decode.  x [B,1,d] -> ([B,1,d], state').
+
+    ``tp_axis``: run on a per-head SHARD of the inner dim inside a manual
+    shard_map region that owns that mesh axis (the fused manual-TP decode,
+    serving/engine).  The per-head params (w_z/w_x/w_dt/conv_x/A/D/norm) and
+    the recurrent state arrive column-sharded over ``ssm_inner``/
+    ``ssm_heads``; the shared B/C streams stay replicated (G == 1 — the
+    gate ``dist/tp.decode_ssm_tp`` requires it); ``w_out`` is row-parallel
+    with an explicit psum (plus the RMS-statistic psum) in
+    ``_gate_norm_out``.  Local dims are derived from the param shapes, so
+    the same code runs replicated (tp_axis=None — bitwise the old path)."""
     Bsz = x.shape[0]
-    di, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
-    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    N, G = cfg.ssm_state, cfg.ssm_groups
+    P = cfg.ssm_head_dim
+    di = p["w_x"].shape[1]          # local inner width (== cfg.d_inner unsharded)
+    H = p["w_dt"].shape[1]          # local head count  (== cfg.ssm_heads unsharded)
     Hg = H // G
 
     z = jnp.einsum("bsd,de->bse", x, p["w_z"])
@@ -217,7 +248,8 @@ def mamba_decode_step(p, x, cfg, state: MambaState) -> Tuple[jnp.ndarray, MambaS
     # match the prefill path's bf16 round-trip (ssd_chunked casts y to the
     # activation dtype) so decode == forward bitwise-closely
     y = y.astype(x.dtype).astype(jnp.float32)
-    out = _gate_norm_out(p, y.reshape(Bsz, 1, di), z, x.dtype)
+    out = _gate_norm_out(p, y.reshape(Bsz, 1, di), z, x.dtype,
+                         tp_axis=tp_axis, di_full=cfg.d_inner)
     return out, MambaState(h=h_new, conv_x=new_tail_x, conv_bc=new_tail_bc)
 
 

@@ -17,7 +17,12 @@ sampling runs in-graph (token t+1 = argmax of token t's logits), page
 allocation runs inside the scan, and done/abort conditions latch into
 on-device flags, so the host syncs once per K tokens.  A lane that ABORTs
 mid-megastep freezes (pos, pending token, recurrent state) and the batcher
-re-issues the refused suffix after ``rebuild_page_table``.
+re-issues the refused suffix after ``rebuild_page_table``.  The
+``forced``/``forced_mask`` inputs teacher-force fed tokens (CHUNKED
+PREFILL under the same dispatch budget — see ``_mega_scan`` and
+``repro.serving.sched``); ``make_decode_state(n_pages=...)`` overcommits
+the pool and ``decode_headroom`` exposes the occupancy the scheduler's
+forecaster consumes.
 
 Sharding, gspmd baseline (``serve_rules``): activations replicated (decode
 activations are KB-scale), weights TP-sharded over ``model``, page pools
@@ -38,7 +43,9 @@ MLP/MoE.  When the model axis is WIDER than ``n_kv`` (e.g. kv=8 on the
 heads so each chip still keeps exactly one resident head.  Local-window
 (gemma3) ring layers and the hybrid family's Mamba backbone + shared
 attention block run INSIDE the same region (ring/ssm state per-lane; the
-mamba math is replicated redundant compute over the model axis).  Only ssm
+mamba math shards its per-head inner dims over ``model`` when
+``dist/tp.decode_ssm_tp`` passes — replicated redundant compute
+otherwise).  Only ssm
 (attention-free) and encdec remain on the gspmd step — every fallback is
 logged, never silent (``_manual_decode_reason``).
 
@@ -155,13 +162,26 @@ def _n_attn_layers(cfg) -> Tuple[int, int]:
 
 def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
                       page_size: int = DEFAULT_PAGE_SIZE,
+                      n_pages: Optional[int] = None,
                       abstract: bool = False) -> Tuple[Dict[str, Any], Dict[str, Any]]:
     """Decode-state pytree (+ logical axes).  ``abstract=True`` builds the
     pytree under eval_shape — nothing is allocated (dry-run states can be
-    hundreds of GB)."""
+    hundreds of GB).
+
+    ``n_pages`` overrides the default worst-case pool plan (``plan_pages``:
+    1.25x of B·max_pages): a serving deployment deliberately OVERCOMMITS
+    the pool (most sequences finish early), betting on the scheduler's
+    admission control / proactive headroom to keep the live set bounded —
+    the pool can always be grown later via ``rebuild_page_table``.  The
+    value is rounded up to the mesh's chip count (page-shard
+    divisibility)."""
     n_chips = _n_chips(rules)
     dtype = cfg.activation_dtype()
-    maxP, n_pages = plan_pages(cfg, B, S_max, page_size, n_chips)
+    if n_pages is None:
+        maxP, n_pages = plan_pages(cfg, B, S_max, page_size, n_chips)
+    else:
+        maxP = -(-S_max // page_size)
+        n_pages = paged.round_pages(int(n_pages), n_chips)
     n_paged, n_ring = _n_attn_layers(cfg)
     manual_tp = rules is not None and _manual_decode_ok(cfg, rules)
     # fused-manual layout with a model axis wider than n_kv: the pool/ring
@@ -236,12 +256,20 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
                            and not isinstance(x, ssm.MambaState)
                            and all(e is None or isinstance(e, str)
                                    for e in x))
-        # fused manual region: ssm state replicated (the mamba math runs as
-        # identical redundant compute on every chip)
-        axes["ssm"] = jax.tree.map(
-            lambda ax: (("layer",) + (None,) * len(ax) if manual_tp
-                        else ("layer",) + tuple(ax)),
-            ssm.MAMBA_STATE_AXES, is_leaf=is_ax)
+        # fused manual region: ssm state head-sharded over model when the
+        # decode_ssm_tp gate passes (batch replicated — activations in the
+        # region are), replicated redundant compute otherwise
+        ssm_tp = (manual_tp and cfg.family == "hybrid"
+                  and TP.decode_ssm_tp(cfg, rules.mesh.shape["model"]))
+        if manual_tp:
+            axes["ssm"] = jax.tree.map(
+                lambda ax: ("layer",) + tuple(
+                    (a if (ssm_tp and a != "batch") else None) for a in ax),
+                ssm.MAMBA_STATE_AXES, is_leaf=is_ax)
+        else:
+            axes["ssm"] = jax.tree.map(
+                lambda ax: ("layer",) + tuple(ax),
+                ssm.MAMBA_STATE_AXES, is_leaf=is_ax)
     if cfg.family == "encdec":
         axes["cross_k"] = ("layer", "batch", None, "kv", None)
         axes["cross_v"] = ("layer", "batch", None, "kv", None)
@@ -295,6 +323,15 @@ def rebuild_page_table(state: Dict[str, Any], *, n_pages: Optional[int] = None,
             fresh, state["seq_ids"], state["block_table"].shape[1])
     state["aborted"] = jnp.zeros_like(state["aborted"])
     return state
+
+
+def decode_headroom(state: Dict[str, Any]) -> Optional[PT.Headroom]:
+    """First-class occupancy/headroom read of a decode state's page pool
+    (None for attention-free families) — the proactive scheduler's
+    observation input.  See ``page_table.headroom``."""
+    if "table" not in state:
+        return None
+    return PT.headroom(state["table"])
 
 
 # ---------------------------------------------------------------------------
@@ -507,8 +544,13 @@ def make_serve_megastep(cfg, *, S_max: int, K: int, rules=None,
     done/abort conditions latch into on-device flags, so the host syncs
     once per K tokens instead of once per token.
 
-    Returns ``megastep(params, state, tokens [B,1], stop_len=None) ->
-    (tokens int32[B, K], state')``.  Positions come from ``state["pos"]``
+    Returns ``megastep(params, state, tokens [B,1], stop_len=None,
+    forced=None, forced_mask=None) -> (tokens int32[B, K], state')``.
+    ``forced``/``forced_mask`` [B, K] teacher-force the fed tokens where the
+    mask is set (chunked prefill: a lane consumes up to K prompt tokens per
+    dispatch and flips to greedy decode mid-megastep — see ``_mega_scan``),
+    so prefill and decode share one dispatch budget.  Positions come from
+    ``state["pos"]``
     (the engine is the source of truth); for the vlm family the M-RoPE
     positions are derived in-graph from the same counter.  ``tokens[:, -1]``
     is always the correct next feed: the last greedy sample for healthy
@@ -534,14 +576,16 @@ def make_serve_megastep(cfg, *, S_max: int, K: int, rules=None,
             cfg.name, _manual_decode_reason(cfg, rules))
     n_chips = _n_chips(rules)
 
-    def megastep(params, state, tokens, stop_len=None):
+    def megastep(params, state, tokens, stop_len=None, forced=None,
+                 forced_mask=None):
         def token_step(st, tok, pos, mrope):
             with ctx.use_rules(rules):
                 return _serve_step_impl(cfg, params, st, tok, pos, mrope,
                                         rules=rules, S_max=S_max,
                                         page_size=page_size,
                                         n_chips=n_chips)
-        return _mega_scan(cfg, K, token_step, state, tokens, stop_len)
+        return _mega_scan(cfg, K, token_step, state, tokens, stop_len,
+                          forced, forced_mask)
 
     megastep.megastep = TP.decode_megastep_mode(cfg, rules, K)
     return megastep
@@ -637,6 +681,7 @@ def _manual_decode_parts(cfg, *, S_max: int, rules,
         n_pd *= mesh.shape[a]
     tp = mesh.shape["model"]
     kv_rep = TP.decode_kv_rep(cfg, tp)
+    ssm_tp = cfg.family == "hybrid" and TP.decode_ssm_tp(cfg, tp)
     maxP = -(-S_max // page_size)
     vocab_sharded = (not cfg.tie_embeddings) and cfg.vocab_size % tp == 0
 
@@ -651,9 +696,17 @@ def _manual_decode_parts(cfg, *, S_max: int, rules,
             ring_spec = P(None, None, None, "model", None)
             state_specs["ring_k"] = ring_spec
             state_specs["ring_v"] = ring_spec
+        if ssm_tp and "ssm" in state:
+            # mamba state head-sharded over model (ssm_heads / ssm_inner
+            # rules): h [L,B,G,Hg,P,N] on Hg, conv_x [L,B,W-1,di] on di;
+            # the shared B/C conv tail stays replicated
+            state_specs["ssm"] = ssm.MambaState(
+                h=P(None, None, None, "model", None, None),
+                conv_x=P(None, None, None, "model"),
+                conv_bc=P())
         param_specs = TP.decode_param_specs(cfg, params,
                                             vocab_sharded=vocab_sharded,
-                                            kv_rep=kv_rep)
+                                            kv_rep=kv_rep, ssm_tp=ssm_tp)
         return param_specs, state_specs
 
     def token_body(params, state, tokens, positions, mrope, *, npr, cap):
@@ -683,7 +736,9 @@ def _manual_decode_parts(cfg, *, S_max: int, rules,
                                         x, attn, positions, kv_rep)
         elif cfg.family == "hybrid":
             x_out = _hybrid_layers_shard(cfg, params, state, new_state,
-                                         x, attn)
+                                         x, attn,
+                                         ssm_axis="model" if ssm_tp
+                                         else None)
         else:
             sk, sv = _scale_xs(cfg, state, cfg.num_layers)
 
@@ -751,17 +806,28 @@ def _make_manual_serve_step(cfg, *, S_max: int, rules,
     return serve_step
 
 
-def _mega_scan(cfg, K: int, token_step, state, tokens, stop_len):
+def _mega_scan(cfg, K: int, token_step, state, tokens, stop_len,
+               forced=None, forced_mask=None):
     """The K-token scan at the megastep's core: in-graph greedy sampling
     feeds token t+1 from token t's logits; a lane whose allocation ABORTs
     latches — its pending (refused) token and position freeze so the host
     can re-issue the suffix after a rebuild; with ``stop_len`` a lane whose
     position reaches its stop latches ``active=False`` (done) in-graph.
     Returns (tokens int32[B, K] — entry k is the token sampled after step k,
-    frozen at the refused token for aborted lanes — and the final state)."""
+    frozen at the refused token for aborted lanes — and the final state).
+
+    CHUNKED PREFILL (``forced``/``forced_mask`` int32/bool[B, K]): where
+    ``forced_mask[:, k]`` is True, the token FED at scan step k+1 is
+    ``forced[:, k]`` instead of the greedy sample — a prefilling lane
+    consumes up to K prompt tokens per dispatch (its KV is written exactly
+    as in teacher forcing) and transitions to greedy decode mid-megastep
+    the moment its mask runs out, so prefill and decode share one dispatch
+    budget.  Column K-1 overrides the RETURNED pending feed ``toks[:, -1]``
+    (the next round's first token).  The abort latch wins over forcing: a
+    refused forced token stays pending for the post-rebuild re-issue."""
     B = tokens.shape[0]
 
-    def one(carry, _):
+    def one(carry, xs):
         st, tok = carry
         pos = st["pos"]
         mrope = (jnp.broadcast_to(pos[None, :, None],
@@ -769,6 +835,9 @@ def _mega_scan(cfg, K: int, token_step, state, tokens, stop_len):
                  if cfg.family == "vlm" else None)
         logits, st2 = token_step(st, tok, pos, mrope)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        if xs is not None:
+            f_tok, f_msk = xs
+            nxt = jnp.where(f_msk[:, None], f_tok[:, None], nxt)
         # aborted lanes keep their refused token pending for the re-issue
         tok2 = jnp.where(st2["aborted"][:, None], tok, nxt)
         if stop_len is not None:
@@ -776,7 +845,11 @@ def _mega_scan(cfg, K: int, token_step, state, tokens, stop_len):
             st2["active"] = st2["active"] & (st2["pos"] < stop_len)
         return (st2, tok2), tok2[:, 0]
 
-    (st, _), toks = jax.lax.scan(one, (state, tokens), None, length=K)
+    xs = None
+    if forced is not None:
+        xs = (jnp.asarray(forced, jnp.int32).T,
+              jnp.asarray(forced_mask, bool).T)       # [K, B] scan inputs
+    (st, _), toks = jax.lax.scan(one, (state, tokens), xs, length=K)
     return toks.T, st
 
 
@@ -789,7 +862,8 @@ def _make_manual_serve_megastep(cfg, *, S_max: int, K: int, rules,
     mesh, n_pd, maxP, make_specs, token_body = _manual_decode_parts(
         cfg, S_max=S_max, rules=rules, page_size=page_size)
 
-    def megastep(params, state, tokens, stop_len=None):
+    def megastep(params, state, tokens, stop_len=None, forced=None,
+                 forced_mask=None):
         B = tokens.shape[0]
         n_pages = state["pools"].k.shape[1]
         npr = n_pages // n_pd
@@ -797,18 +871,21 @@ def _make_manual_serve_megastep(cfg, *, S_max: int, K: int, rules,
                              factor=cfg.page_capacity_factor)
         param_specs, state_specs = make_specs(params, state)
         stop_spec = P() if stop_len is not None else None
+        f_spec = P() if forced is not None else None
 
-        def body(params, state, tokens, stop_len):
+        def body(params, state, tokens, stop_len, forced, forced_mask):
             def token_step(st, tok, pos, mrope):
                 return token_body(params, st, tok, pos, mrope,
                                   npr=npr, cap=cap)
-            return _mega_scan(cfg, K, token_step, state, tokens, stop_len)
+            return _mega_scan(cfg, K, token_step, state, tokens, stop_len,
+                              forced, forced_mask)
 
         mapped = shard_map(
             body, mesh=mesh,
-            in_specs=(param_specs, state_specs, P(), stop_spec),
+            in_specs=(param_specs, state_specs, P(), stop_spec, f_spec,
+                      f_spec),
             out_specs=(P(), state_specs), check_vma=False)
-        return mapped(params, state, tokens, stop_len)
+        return mapped(params, state, tokens, stop_len, forced, forced_mask)
 
     megastep.megastep = TP.decode_megastep_mode(cfg, rules, K)
     return megastep
@@ -863,11 +940,15 @@ def _gemma_layers_shard(cfg, params, state, new_state, x, attn, positions,
     return x
 
 
-def _hybrid_layers_shard(cfg, params, state, new_state, x, attn):
-    """zamba2 hybrid inside the fused manual region: the Mamba backbone runs
-    replicated (identical redundant compute on every chip — decode-time SSM
-    math carries no model-axis work), the ONE shared attention + MLP block
-    is Megatron-sharded with per-invocation paged KV."""
+def _hybrid_layers_shard(cfg, params, state, new_state, x, attn,
+                         ssm_axis=None):
+    """zamba2 hybrid inside the fused manual region: the ONE shared
+    attention + MLP block is Megatron-sharded with per-invocation paged KV;
+    the Mamba backbone shards its per-head inner dims over ``model``
+    (``ssm_axis="model"`` when ``dist/tp.decode_ssm_tp`` passes — params
+    and recurrent state arrive head-sharded, ``mamba_decode_step`` psums
+    the RMS statistic and the row-parallel out projection) and runs as
+    replicated redundant compute otherwise."""
     every = cfg.shared_attn_every
     n_inv = cfg.num_layers // every
     sp = params["shared"]
@@ -877,7 +958,8 @@ def _hybrid_layers_shard(cfg, params, state, new_state, x, attn):
     pk_out, pv_out, sk_out, sv_out = [], [], [], []
     for g in range(n_inv):
         x, s2 = HY.mamba_decode_chunk(cfg, params["layers"], state["ssm"],
-                                      x, g * every, (g + 1) * every)
+                                      x, g * every, (g + 1) * every,
+                                      tp_axis=ssm_axis)
         new_ssm_chunks.append(s2)
         h, pk_g, pv_g, sc = attn(nn.rmsnorm(sp["ln1"], x), sp["attn"],
                                  pk[g], pv[g],
@@ -891,7 +973,8 @@ def _hybrid_layers_shard(cfg, params, state, new_state, x, attn):
     rem = cfg.num_layers - n_inv * every
     if rem:
         x, s2 = HY.mamba_decode_chunk(cfg, params["layers"], state["ssm"],
-                                      x, n_inv * every, cfg.num_layers)
+                                      x, n_inv * every, cfg.num_layers,
+                                      tp_axis=ssm_axis)
         new_ssm_chunks.append(s2)
     # new_state["aborted"] already includes this step's aborts: a refused
     # lane's recurrence must not advance (its token is re-issued later)

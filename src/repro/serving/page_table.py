@@ -32,7 +32,8 @@ re-admitted slot could read a reclaimed page.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+import contextlib
+from typing import Iterator, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +56,27 @@ PROBE_STATS = {"keys_probed": 0}
 
 def probe_stats_reset() -> None:
     PROBE_STATS["keys_probed"] = 0
+
+
+@contextlib.contextmanager
+def probe_stats_scope() -> Iterator[dict]:
+    """Scoped probe accounting: inside the ``with`` block the counter starts
+    at 0 and counts only the scope's own (eager) probes; on exit the
+    enclosing counter value is RESTORED exactly, so one batcher run / bench
+    can never bleed counts into another (the PROBE_STATS lifecycle bug).
+    Read the scoped count from the yielded dict *before* the block exits:
+
+        with PT.probe_stats_scope() as ps:
+            ...page-table calls...
+            n = ps["keys_probed"]
+
+    Scopes nest: each level sees only its own counts."""
+    outer = PROBE_STATS["keys_probed"]
+    PROBE_STATS["keys_probed"] = 0
+    try:
+        yield PROBE_STATS
+    finally:
+        PROBE_STATS["keys_probed"] = outer
 
 
 def _note_probes(n) -> None:
@@ -270,3 +292,32 @@ def stats(table: BT.HashTable) -> PageTableStats:
     return PageTableStats(live_pages=table.num_keys,
                           tombstones=table.num_tombs,
                           occupancy=BT.occupancy(table))
+
+
+class Headroom(NamedTuple):
+    """First-class occupancy/headroom view of the page pool (host ints —
+    the admission controller's input).  With tombstone reuse (Prop. 2 as
+    the allocator) a TOMBSTONE cell is immediately re-claimable, so the
+    capacity that matters for admission is ``free_cells = n_pages -
+    live_pages``: the allocator ABORTs only when every cell holds a live
+    key.  ``occupancy`` keeps the paper's definition (non-EMPTY fraction,
+    what forces rebuilds in NO-reuse designs) for comparison."""
+    n_pages: int
+    live_pages: int
+    tombstones: int
+    free_cells: int        # n_pages - live_pages (tombstones are reusable)
+    live_fraction: float   # live_pages / n_pages — the abort-relevant load
+    occupancy: float       # (live + tombstones) / n_pages (paper's metric)
+
+
+def headroom(table: BT.HashTable) -> Headroom:
+    """Synchronous (host) headroom read.  One device sync for the two
+    counters — cheap next to the once-per-K-tokens megastep sync, and the
+    proactive scheduler needs concrete numbers to decide evict/grow."""
+    m = BT.size(table)
+    live = int(table.num_keys)
+    tombs = int(table.num_tombs)
+    return Headroom(n_pages=m, live_pages=live, tombstones=tombs,
+                    free_cells=m - live,
+                    live_fraction=live / max(m, 1),
+                    occupancy=(live + tombs) / max(m, 1))

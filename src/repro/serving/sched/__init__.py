@@ -1,0 +1,26 @@
+"""``repro.serving.sched`` — proactive admission control & SLO-aware
+continuous-batching scheduler over the hash-table page allocator.
+
+See README.md in this directory for the design: request lifecycle
+(``request``), occupancy forecaster (``forecast``), pluggable policies
+(``policy``), and the scheduler + proactive headroom controller
+(``scheduler``).  ``workload`` builds deterministic synthetic traffic for
+bench / CI soak.
+"""
+from repro.serving.sched.forecast import (Forecast, OccupancyForecaster,
+                                          pages_held, pages_needed)
+from repro.serving.sched.policy import (DeadlinePolicy, POLICIES, Policy,
+                                        PriorityPolicy, get_policy)
+from repro.serving.sched.request import (DONE, QUEUED, RUNNING, Request)
+from repro.serving.sched.scheduler import (Plan, RoundStats, SchedStats,
+                                           Scheduler)
+from repro.serving.sched.workload import (churn_request, churn_workload,
+                                          synthetic_workload)
+
+__all__ = [
+    "DONE", "QUEUED", "RUNNING", "Request",
+    "Forecast", "OccupancyForecaster", "pages_held", "pages_needed",
+    "Policy", "PriorityPolicy", "DeadlinePolicy", "POLICIES", "get_policy",
+    "Plan", "RoundStats", "SchedStats", "Scheduler",
+    "churn_request", "churn_workload", "synthetic_workload",
+]

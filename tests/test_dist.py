@@ -207,6 +207,31 @@ def test_decode_manual_tp_gate():
         assert TP.decode_manual_tp(man, serve_manual_rules(mesh42)) == 0
 
 
+def test_decode_ssm_tp_gate():
+    """decode_ssm_tp: the hybrid mamba backbone shards its per-head dims
+    over model iff B/C streams are shared (ssm_groups == 1) and the head
+    count divides; tp == 1 passes for CPU coverage of the sharded path."""
+    hyb = get_smoke_config("zamba2-1.2b")            # Hg=8, G=1, di=128
+    assert TP.decode_ssm_tp(hyb, 1)
+    assert TP.decode_ssm_tp(hyb, 2)
+    assert TP.decode_ssm_tp(hyb, 4)
+    assert TP.decode_ssm_tp(hyb, 8)
+    assert not TP.decode_ssm_tp(hyb, 3)              # Hg % tp != 0
+    assert not TP.decode_ssm_tp(hyb, 16)             # wider than Hg
+    # grouped B/C (ssm_groups > 1): the head shard would split groups
+    assert not TP.decode_ssm_tp(
+        dataclasses.replace(hyb, ssm_groups=2), 2)
+    # the full config shards on the 16-wide production model axis
+    from repro.configs import get_config
+    assert TP.decode_ssm_tp(get_config("zamba2-1.2b"), 16)
+    # attention archs without SSM dims never pass
+    assert not TP.decode_ssm_tp(get_smoke_config("qwen2.5-32b"), 2)
+    # the sharded param specs cover exactly the mamba param set
+    from repro.models import ssm as SSM
+    p, _ = SSM.mamba_init(jax.random.PRNGKey(0), hyb, jnp.float32)
+    assert set(TP._mamba_param_specs()) == set(p)
+
+
 def test_serve_manual_rules_pool_layout():
     """The fused-decode layout: pages over (pod, data) only, KV heads over
     model — serve_manual_rules + POOL_AXES_TP must resolve to exactly that."""

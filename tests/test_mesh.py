@@ -200,6 +200,7 @@ def test_manual_decode_matches_gspmd():
     run_with_devices(COMMON + """
 import dataclasses
 from repro.configs import get_smoke_config
+from repro.dist import tp as TP
 from repro.dist.sharding import serve_rules, serve_manual_rules
 from repro.models.registry import get_model
 from repro.serving import engine as EG
@@ -212,7 +213,8 @@ CASES = [
     ("qwen2.5-32b", (2, 4), ("data", "model"), {}),
     # local-window ring layers inside the fused region
     ("gemma3-12b", (2, 2, 2), ("pod", "data", "model"), {}),
-    # hybrid: mamba backbone replicated + shared attn block sharded
+    # hybrid: mamba backbone HEAD-SHARDED over model (decode_ssm_tp) +
+    # Megatron-sharded shared attn block
     ("zamba2-1.2b", (4, 2), ("data", "model"), {}),
 ]
 for arch, shape, axes, over in CASES:
@@ -237,6 +239,10 @@ for arch, shape, axes, over in CASES:
     man_cfg = dataclasses.replace(cfg, tp_impl="manual")
     man_rules = serve_manual_rules(mesh)
     assert EG._manual_decode_ok(man_cfg, man_rules), (arch, "gate refused")
+    if cfg.family == "hybrid":
+        # the mamba math must take the SHARDED path on this mesh (tp=2),
+        # so the parity below covers it against the gspmd/replicated impls
+        assert TP.decode_ssm_tp(man_cfg, mesh.shape["model"])
     gspmd = run(cfg, serve_rules(mesh))
     manual = run(man_cfg, man_rules)
     np.testing.assert_allclose(manual, gspmd, atol=5e-2, rtol=1e-2,

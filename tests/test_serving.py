@@ -352,6 +352,12 @@ def test_batcher_megastep_churn():
     st = srv.table_stats()
     assert int(st.live_pages) + int(st.tombstones) <= \
         srv.state["pools"].k.shape[1]
+    # the proactive scheduler must keep the default (non-overcommitted)
+    # pool out of ABORT entirely, and its per-round stats must carry the
+    # scoped probe counter (PROBE_STATS lifecycle satellite)
+    assert srv.sched.stats.aborts == 0
+    assert len(srv.sched.rounds) == 16
+    assert any(rs.keys_probed > 0 for rs in srv.sched.rounds)
 
 
 def test_page_allocator_tombstone_reuse():
