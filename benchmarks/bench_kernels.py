@@ -104,6 +104,69 @@ def paged_attention_correctness(verbose=True):
     return rows
 
 
+def fused_decode_bench(verbose=True):
+    """Fused block-table-walk + paged-attention kernel: bitwise vs the
+    two-dispatch composition it replaces, plus the structural HBM
+    bytes-per-token counter (``kernels.stats``, noted on eager calls).
+    The byte counts are deterministic (seeded snapshot), so the measured
+    probe/attn reduction vs the two-dispatch baseline is GATED."""
+    from repro.kernels import stats as KS
+    from repro.kernels.fused_decode import (fused_decode_ref,
+                                            fused_paged_attention)
+
+    rng = np.random.default_rng(3)
+    rows = []
+    for (B, QH, KH, D, PS, MP) in [(4, 4, 4, 32, 8, 8), (4, 8, 2, 16, 4, 16)]:
+        NP = B * MP
+        k = jnp.asarray(rng.normal(size=(NP, PS, KH, D)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(NP, PS, KH, D)), jnp.bfloat16)
+        q = jnp.asarray(rng.normal(size=(B, QH, D)), jnp.bfloat16)
+        pos = jnp.asarray(rng.integers(PS, MP * PS, size=(B,)), jnp.int32)
+        perm = rng.permutation(NP)
+        bt = np.full((B, MP), -1, np.int32)
+        for b in range(B):
+            n_live = int(pos[b]) // PS + 1
+            bt[b, :n_live] = perm[b * MP:b * MP + n_live]
+        bt = jnp.asarray(bt)
+
+        with KS.kernel_stats_scope() as st:
+            out_k = fused_paged_attention(q, k, v, bt, pos, interpret=True)
+            fused_probe = st["probe_bytes"]
+            fused_attn = st["attn_bytes"]
+        out_r = fused_decode_ref(q, k, v, bt, pos, interpret=True)
+        bitwise = bool(np.array_equal(np.asarray(out_k), np.asarray(out_r)))
+        assert bitwise, (B, QH, KH, D, PS, MP)
+
+        # two-dispatch structural baseline: the materialized slot view is
+        # written then re-read ([B,MP] i32 round trip) and the baseline
+        # attention kernel walks every padded slot per kv head
+        page_bytes = PS * D * (k.dtype.itemsize + v.dtype.itemsize)
+        two_probe = 2 * B * MP * 4
+        two_attn = B * KH * MP * page_bytes
+        rows.append({
+            "shape": (B, QH, KH, D, PS, MP),
+            "bitwise": bitwise,
+            "probe_bytes_per_token_twodispatch": two_probe / B,
+            "probe_bytes_per_token_fused": fused_probe / B,
+            "attn_bytes_per_token_twodispatch": two_attn / B,
+            "attn_bytes_per_token_fused": fused_attn / B,
+            "probe_bytes_reduction_x": two_probe / max(fused_probe, 1),
+            "attn_bytes_reduction_x": two_attn / max(fused_attn, 1),
+        })
+    if verbose:
+        print("bench_kernels/fused_decode — fused == two-dispatch (bitwise); "
+              "HBM bytes/token:")
+        for r in rows:
+            print(f"  shape {r['shape']}: probe "
+                  f"{r['probe_bytes_per_token_twodispatch']:.0f} -> "
+                  f"{r['probe_bytes_per_token_fused']:.0f} "
+                  f"({r['probe_bytes_reduction_x']:.1f}x), attn "
+                  f"{r['attn_bytes_per_token_twodispatch']:.0f} -> "
+                  f"{r['attn_bytes_per_token_fused']:.0f} "
+                  f"({r['attn_bytes_reduction_x']:.2f}x)")
+    return rows
+
+
 def run(verbose: bool = True, fast: bool = False) -> dict:
     loads = (0.3, 0.6) if fast else (0.3, 0.6, 0.85)
     out = {
@@ -112,5 +175,6 @@ def run(verbose: bool = True, fast: bool = False) -> dict:
                                    B=256 if fast else 1 << 10),
         "probe_structural": probe_structural(verbose=verbose),
         "paged_attention": paged_attention_correctness(verbose=verbose),
+        "fused_decode": fused_decode_bench(verbose=verbose),
     }
     return out

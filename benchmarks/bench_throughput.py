@@ -75,6 +75,47 @@ def probes_per_token(B: int = 8, max_pages: int = 64, page_size: int = 4,
             "probe_reduction_x": full / max(incr, 1e-9)}
 
 
+def bytes_per_token(B: int = 8, max_pages: int = 64, page_size: int = 4,
+                    tokens: int = 16) -> dict:
+    """HBM bytes moved per decode token, on a block table grown by a real
+    ``alloc_step_incremental`` replay: the two-dispatch slots+attend
+    composition (structural: slot-view round trip + every padded slot per
+    kv head) vs the fused kernel's ``kernels.stats`` counter (noted on the
+    eager dispatch — raw table rows once, live pages only).  Deterministic
+    replay, so the per-token counts and the reduction are gated."""
+    from repro.kernels import stats as KS
+    from repro.kernels.fused_decode import fused_paged_attention
+    from repro.serving import page_table as PT
+
+    seq = jnp.arange(B, dtype=jnp.int32)
+    table = PT.create_table(B * max_pages)
+    bt = jnp.full((B, max_pages), -1, jnp.int32)
+    for pos in range(tokens):
+        p = jnp.full((B,), pos, jnp.int32)
+        (table, ws, ab), bt = PT.alloc_step_incremental(
+            table, seq, p, bt, page_size=page_size)
+        assert not bool(jnp.any(ab))
+
+    KH, D = 2, 8
+    k = jnp.zeros((B * max_pages, page_size, KH, D), jnp.bfloat16)
+    v = jnp.zeros_like(k)
+    q = jnp.zeros((B, KH, D), jnp.bfloat16)
+    positions = jnp.full((B,), tokens - 1, jnp.int32)
+    with KS.kernel_stats_scope() as st:
+        fused_paged_attention(q, k, v, bt, positions, interpret=True)
+        fused_probe, fused_attn = st["probe_bytes"], st["attn_bytes"]
+
+    page_bytes = page_size * D * (k.dtype.itemsize + v.dtype.itemsize)
+    two_probe = 2 * B * max_pages * 4
+    two_attn = B * KH * max_pages * page_bytes
+    return {"probe_bytes_per_token_twodispatch": two_probe / B,
+            "probe_bytes_per_token_fused": fused_probe / B,
+            "attn_bytes_per_token_twodispatch": two_attn / B,
+            "attn_bytes_per_token_fused": fused_attn / B,
+            "probe_bytes_reduction_x": two_probe / max(fused_probe, 1),
+            "attn_bytes_reduction_x": two_attn / max(fused_attn, 1)}
+
+
 def decode_tok_s(fast: bool) -> dict:
     """Decode megastep wall-clock tokens/s at K in {1, 4, 16} (smoke model,
     CPU — report-only like every wall-clock metric)."""
@@ -199,6 +240,7 @@ def run(verbose: bool = True, fast: bool = False) -> dict:
                      "lookup_miss_Mops": B / t_miss / 1e6,
                      "mixed_Mops": B / t_mixed / 1e6})
     probes = probes_per_token()
+    hbm = bytes_per_token()
     decode = decode_tok_s(fast)
     sched = sched_storm(fast)
     if verbose:
@@ -210,6 +252,13 @@ def run(verbose: bool = True, fast: bool = False) -> dict:
         print(f"  decode probes/token: full={probes['probes_per_token_full']:.1f} "
               f"incremental={probes['probes_per_token_incremental']:.1f} "
               f"({probes['probe_reduction_x']:.0f}x fewer)")
+        print(f"  decode HBM bytes/token: probe "
+              f"{hbm['probe_bytes_per_token_twodispatch']:.0f} -> "
+              f"{hbm['probe_bytes_per_token_fused']:.0f} "
+              f"({hbm['probe_bytes_reduction_x']:.1f}x), attn "
+              f"{hbm['attn_bytes_per_token_twodispatch']:.0f} -> "
+              f"{hbm['attn_bytes_per_token_fused']:.0f} "
+              f"({hbm['attn_bytes_reduction_x']:.2f}x)")
         print("  decode megastep tok/s: "
               + "  ".join(f"K{k.split('_K')[1]}={v:.1f}"
                           for k, v in decode.items()))
@@ -221,4 +270,5 @@ def run(verbose: bool = True, fast: bool = False) -> dict:
               f"grows={sched['sched_pool_grows']}; "
               f"ttft p50/p99={sched['ttft_p50_steps']:.0f}/"
               f"{sched['ttft_p99_steps']:.0f} steps (report-only)")
-    return {"rows": rows, "decode": {**probes, **decode}, "sched": sched}
+    return {"rows": rows, "decode": {**probes, **hbm, **decode},
+            "sched": sched}

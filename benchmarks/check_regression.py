@@ -29,7 +29,9 @@ import sys
 # residuals (BLAS/ISA-dependent; correctness is gated by the pytest suite).
 # "tok_s": decode megastep tokens/s — wall-clock like Mops.  The decode
 # probes_per_token_* / probe_reduction_x counts are deterministic replays
-# and stay GATED; so are the scheduler storm's abort/avoided/preemption
+# and stay GATED, as are the fused-kernel HBM byte counters
+# (probe_bytes_per_token_* / attn_bytes_per_token_* / *_bytes_reduction_x:
+# structural accounting over seeded snapshots, exactly reproducible); so are the scheduler storm's abort/avoided/preemption
 # counts (virtual-clock).  The scheduler queue-wait / TTFT percentiles are
 # report-only per ISSUE 5 ("queue_wait" / "ttft" markers).
 NOISY_MARKERS = ("Mops", "max_err", "tok_s", "queue_wait", "ttft")
@@ -84,6 +86,35 @@ def compare(baseline: dict, results: dict, tolerance: float):
     return failures, noisy, missing, ungated
 
 
+def print_diff_table(baseline: dict, results: dict, tolerance: float):
+    """Full per-metric diff table (every gated metric, not just the
+    failures) — printed on failure so a red gate shows the whole landscape
+    at once instead of forcing a local re-run to see what else moved."""
+    base = flatten(baseline)
+    new = flatten(results)
+    rows = []
+    for path, b in sorted(base.items()):
+        if is_noisy(path):
+            continue
+        if path not in new:
+            rows.append((path, b, float("nan"), float("nan"), "MISSING"))
+            continue
+        n = new[path]
+        if not (math.isfinite(b) and math.isfinite(n)):
+            status = "ok" if (math.isnan(b) and math.isnan(n)) else "FAIL"
+            rows.append((path, b, n, float("nan"), status))
+            continue
+        rel = abs(n - b) / max(abs(b), 1e-12)
+        rows.append((path, b, n, rel, "FAIL" if rel > tolerance else "ok"))
+    w = max((len(r[0]) for r in rows), default=10)
+    print(f"\nfull gated diff table ({len(rows)} metrics):")
+    print(f"  {'metric':<{w}}  {'baseline':>12}  {'now':>12}  "
+          f"{'drift':>7}  status")
+    for path, b, n, rel, status in rows:
+        drift = f"{rel * 100:.1f}%" if math.isfinite(rel) else "-"
+        print(f"  {path:<{w}}  {b:>12.6g}  {n:>12.6g}  {drift:>7}  {status}")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
@@ -119,6 +150,7 @@ def main() -> int:
         print(f"\nFAIL — {len(failures)} metrics drifted beyond tolerance:")
         for line in failures:
             print("  ", line)
+        print_diff_table(baseline, results, args.tolerance)
     ok = not failures and not missing
     print("\ncheck_regression:", "OK" if ok else "FAILED")
     return 0 if ok else 1

@@ -66,6 +66,12 @@ class ModelConfig:
     kv_cache_dtype: str = "bfloat16"
     # paged-decode per-chip page-capacity factor over the uniform share
     page_capacity_factor: float = 2.0
+    # decode attention as ONE fused Pallas dispatch that walks the raw
+    # incremental block table in-kernel with double-buffered page DMA
+    # (kernels/fused_decode) instead of the two-dispatch slots+compact →
+    # attend path.  Gated per path by serving/engine._fused_kernel_reason;
+    # a fallback is always logged + surfaced in dryrun meta, never silent.
+    fused_kernel: bool = False
 
     @property
     def scan_unroll(self) -> int:

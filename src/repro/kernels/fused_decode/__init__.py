@@ -1,0 +1,4 @@
+from repro.kernels.fused_decode.ops import (fused_paged_attention,
+                                            merge_fused_partials)
+from repro.kernels.fused_decode.ref import (block_table_slots_ref,
+                                            fused_decode_ref)

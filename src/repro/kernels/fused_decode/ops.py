@@ -1,0 +1,75 @@
+"""Jitted wrapper for the fused block-table-walk + paged-attention kernel,
+with structural HBM byte accounting on eager calls (``kernels.stats``)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import stats as KS
+from repro.kernels.fused_decode.fused import fused_decode_kernel
+from repro.kernels.fused_decode.ref import fused_decode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("partials", "interpret",
+                                             "use_kernel", "quantized"))
+def _fused_impl(q, k_pages, v_pages, block_table, positions, scales, *,
+                partials: bool, interpret: bool, use_kernel: bool,
+                quantized: bool):
+    del quantized  # only disambiguates the jit cache for scales=None
+    if use_kernel:
+        return fused_decode_kernel(q, k_pages, v_pages, block_table,
+                                   positions, scales=scales,
+                                   partials=partials, interpret=interpret)
+    assert not partials, "the two-dispatch ref has no partials mode"
+    return fused_decode_ref(q, k_pages, v_pages, block_table, positions,
+                            scales=scales, interpret=interpret)
+
+
+def _note_fused_bytes(q, k_pages, v_pages, block_table, positions, scales):
+    """Structural accounting for ONE fused dispatch: the raw block-table
+    rows are scalar-prefetched once (no materialized slot round trip), and
+    only live pages — ``p·PS <= pos`` with a present table entry — are
+    DMA'd, per kv head."""
+    B, MP = block_table.shape
+    _, PS, KH, D = k_pages.shape
+    page_bytes = PS * D * (k_pages.dtype.itemsize + v_pages.dtype.itemsize)
+    if scales is not None:
+        page_bytes += PS * (scales[0].dtype.itemsize
+                            + scales[1].dtype.itemsize)
+    try:
+        bt = np.asarray(block_table)
+        pos = np.asarray(positions)
+    except (jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        return  # traced: byte counters only apply to eager replays
+    live = np.arange(MP)[None, :] * PS <= pos[:, None]
+    fetched = int(np.sum(live & (bt >= 0)))
+    KS.note_bytes("probe_bytes", B * MP * 4)
+    KS.note_bytes("attn_bytes", fetched * KH * page_bytes)
+
+
+def fused_paged_attention(q, k_pages, v_pages, block_table, positions, *,
+                          scales=None, partials: bool = False,
+                          use_kernel: bool = True,
+                          interpret: bool = False):
+    """One-dispatch decode attention over the RAW incremental block table
+    (see fused.py).  ``use_kernel=False`` routes to the two-dispatch
+    baseline (``fused_decode_ref``) — the fused kernel's normalized output
+    is bitwise identical to it.
+
+    Returns [B,QH,D], or the unnormalized per-chip (o, m, l) triple for
+    ``serving/paged.merge_global`` when ``partials=True``."""
+    _note_fused_bytes(q, k_pages, v_pages, block_table, positions, scales)
+    return _fused_impl(q, k_pages, v_pages, block_table, positions, scales,
+                       partials=partials, interpret=interpret,
+                       use_kernel=use_kernel, quantized=scales is not None)
+
+
+def merge_fused_partials(o, m, l):
+    """Single-dispatch finish of the partials triple — identical math to
+    ``serving/paged.merge_global`` with no mesh axes (normalize only).
+    Mostly for tests: the engine always merges across chips."""
+    return o / jnp.maximum(l, 1e-20)[..., None]

@@ -1,0 +1,32 @@
+"""The two-dispatch baseline the fused kernel replaces, composed verbatim:
+dispatch 1 materializes the masked slot view of the block table (the same
+elementwise read as ``serving/page_table.block_table_slots`` — duplicated
+here so the kernel layer does not import the serving layer), dispatch 2
+runs the baseline paged-attention kernel over it.  The fused kernel's
+normalized output must be BITWISE identical to this composition."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.paged_attention import paged_attention_kernel
+
+
+def block_table_slots_ref(block_table, positions, *, page_size: int):
+    """Masked slot view (== ``serving/page_table.block_table_slots``):
+    -1 where the logical page is absent or past the live horizon."""
+    max_pages = block_table.shape[1]
+    logical = jnp.arange(max_pages, dtype=jnp.int32)
+    live = logical[None, :] <= (positions[:, None] // page_size)
+    return jnp.where(live & (block_table >= 0), block_table, -1)
+
+
+def fused_decode_ref(q, k_pages, v_pages, block_table, positions, *,
+                     scales=None, interpret: bool = False):
+    """Separate probe + attention dispatches over the same raw inputs as
+    ``fused_decode_kernel`` (block_table int32[B,MP] raw cache rows,
+    positions int32[B] current decode position)."""
+    PS = k_pages.shape[1]
+    slots = block_table_slots_ref(block_table, positions, page_size=PS)
+    lens = positions.astype(jnp.int32) + 1
+    return paged_attention_kernel(q, k_pages, v_pages, slots, lens,
+                                  scales=scales, interpret=interpret)

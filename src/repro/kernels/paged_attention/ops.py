@@ -10,17 +10,44 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import stats as KS
 from repro.kernels.paged_attention.paged_attention import paged_attention_kernel
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
-def paged_attention(q, k_pages, v_pages, page_ids, lens, *,
-                    use_kernel: bool = True, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret",
+                                             "quantized"))
+def _paged_attention_impl(q, k_pages, v_pages, page_ids, lens, scales, *,
+                          use_kernel: bool, interpret: bool,
+                          quantized: bool):
+    del quantized  # only disambiguates the jit cache for scales=None
     if use_kernel:
         return paged_attention_kernel(q, k_pages, v_pages, page_ids, lens,
-                                      interpret=interpret)
-    return paged_attention_ref(q, k_pages, v_pages, page_ids, lens)
+                                      scales=scales, interpret=interpret)
+    return paged_attention_ref(q, k_pages, v_pages, page_ids, lens,
+                               scales=scales)
+
+
+def paged_attention(q, k_pages, v_pages, page_ids, lens, *, scales=None,
+                    use_kernel: bool = True, interpret: bool = False):
+    """Two-dispatch decode attention (the slot view in ``page_ids`` was
+    materialized by a separate block-table dispatch).  Structural HBM bytes
+    are accounted on eager calls (``kernels.stats``): the kernel's BlockSpec
+    clamps dead ``-1`` ids to page 0 and fetches anyway, so every (seq,
+    kv-head) lane pays all MP page DMAs, and the slot indices made one HBM
+    round trip (written by the probe dispatch, re-read here)."""
+    B, MP = page_ids.shape
+    NP, PS, KH, D = k_pages.shape
+    page_bytes = PS * D * (k_pages.dtype.itemsize + v_pages.dtype.itemsize)
+    if scales is not None:
+        page_bytes += PS * (scales[0].dtype.itemsize
+                            + scales[1].dtype.itemsize)
+    KS.note_bytes("probe_bytes", 2 * B * MP * 4)        # slot round trip
+    KS.note_bytes("attn_bytes", B * KH * MP * page_bytes)
+    return _paged_attention_impl(q, k_pages, v_pages, page_ids, lens,
+                                 scales, use_kernel=use_kernel,
+                                 interpret=interpret,
+                                 quantized=scales is not None)
 
 
 def shard_heads(q, k_pages, v_pages, shard: int, n_shards: int,

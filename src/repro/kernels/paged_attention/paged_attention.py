@@ -30,9 +30,12 @@ def _pa_kernel(page_ids_ref, lens_ref,      # scalar prefetch [B,MP], [B]
                q_ref,                        # [1, 1, G, D]
                k_ref,                        # [1, PS, 1, D]
                v_ref,                        # [1, PS, 1, D]
-               o_ref,                        # [1, 1, G, D]
-               m_scr, l_scr, acc_scr,        # VMEM scratch [G,1],[G,1],[G,D]
-               *, PS: int, G: int, D: int, MP: int):
+               *rest,                        # [ks_ref, vs_ref,] o_ref, scratch
+               PS: int, G: int, D: int, MP: int, quantized: bool = False):
+    if quantized:                            # int8 pools: [1, PS, 1] bf16
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -53,6 +56,9 @@ def _pa_kernel(page_ids_ref, lens_ref,      # scalar prefetch [B,MP], [B]
         q = q_ref[0, 0].astype(jnp.float32)            # [G, D]
         k = k_ref[0, :, 0].astype(jnp.float32)         # [PS, D]
         v = v_ref[0, :, 0].astype(jnp.float32)         # [PS, D]
+        if quantized:                                  # dequant in f32
+            k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         s = s * (D ** -0.5)                            # [G, PS]
@@ -78,28 +84,39 @@ def _pa_kernel(page_ids_ref, lens_ref,      # scalar prefetch [B,MP], [B]
 
 
 def paged_attention_kernel(q, k_pages, v_pages, page_ids, lens, *,
-                           interpret: bool = False):
-    """q [B,QH,D]; pools [NP,PS,KH,D]; page_ids int32[B,MP]; lens int32[B].
-    Returns [B,QH,D]."""
+                           scales=None, interpret: bool = False):
+    """q [B,QH,D]; pools [NP,PS,KH,D]; page_ids int32[B,MP]; lens int32[B];
+    ``scales``: optional (k_scales, v_scales) [NP,PS,KH] bf16 sidecars for
+    int8 pools (dequantized in f32 inside the kernel).  Returns [B,QH,D]."""
     B, QH, D = q.shape
     NP, PS, KH, _ = k_pages.shape
     MP = page_ids.shape[1]
     assert QH % KH == 0
     G = QH // KH
     q4 = q.reshape(B, KH, G, D)
+    quantized = scales is not None
 
     def _kv_map(b, h, p, ids, ln):
         # clamp only for addressing; the kernel masks on the raw -1 sentinel
         return (jnp.clip(ids[b, p], 0, NP - 1), 0, h, 0)
 
+    def _sc_map(b, h, p, ids, ln):
+        return (jnp.clip(ids[b, p], 0, NP - 1), 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), lambda b, h, p, ids, ln: (b, h, 0, 0)),
+        pl.BlockSpec((1, PS, 1, D), _kv_map),
+        pl.BlockSpec((1, PS, 1, D), _kv_map),
+    ]
+    operands = [q4, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, PS, 1), _sc_map)] * 2
+        operands += [scales[0], scales[1]]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KH, MP),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, p, ids, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, PS, 1, D), _kv_map),
-            pl.BlockSpec((1, PS, 1, D), _kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, D),
                                lambda b, h, p, ids, ln: (b, h, 0, 0)),
         scratch_shapes=[
@@ -108,12 +125,12 @@ def paged_attention_kernel(q, k_pages, v_pages, page_ids, lens, *,
             pltpu.VMEM((G, D), jnp.float32),
         ],
     )
-    kernel = functools.partial(_pa_kernel, PS=PS, G=G, D=D, MP=MP)
+    kernel = functools.partial(_pa_kernel, PS=PS, G=G, D=D, MP=MP,
+                               quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
         interpret=interpret,
-    )(page_ids.astype(jnp.int32), lens.astype(jnp.int32), q4, k_pages,
-      v_pages)
+    )(page_ids.astype(jnp.int32), lens.astype(jnp.int32), *operands)
     return out.reshape(B, QH, D)

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def paged_attention_ref(q, k_pages, v_pages, page_ids, lens):
+def paged_attention_ref(q, k_pages, v_pages, page_ids, lens, *, scales=None):
     """Decode attention over paged KV.
 
     q:        [B, QH, D]      single query token per sequence
@@ -12,6 +12,7 @@ def paged_attention_ref(q, k_pages, v_pages, page_ids, lens):
     v_pages:  [NP, PS, KH, D] physical value pool
     page_ids: int32[B, MP]    physical page per (seq, logical page); -1 unused
     lens:     int32[B]        KV length per sequence
+    scales:   optional (k_scales, v_scales) [NP, PS, KH] for int8 pools
     returns:  [B, QH, D]
     """
     B, QH, D = q.shape
@@ -22,6 +23,13 @@ def paged_attention_ref(q, k_pages, v_pages, page_ids, lens):
     safe_ids = jnp.clip(page_ids, 0, NP - 1)
     k = k_pages[safe_ids].reshape(B, MP * PS, KH, D)
     v = v_pages[safe_ids].reshape(B, MP * PS, KH, D)
+    if scales is not None:
+        k = (k.astype(jnp.float32)
+             * scales[0][safe_ids].reshape(B, MP * PS, KH)
+             .astype(jnp.float32)[..., None])
+        v = (v.astype(jnp.float32)
+             * scales[1][safe_ids].reshape(B, MP * PS, KH)
+             .astype(jnp.float32)[..., None])
     pos = jnp.arange(MP * PS)[None, :]
     valid = (pos < lens[:, None]) & jnp.repeat(page_ids >= 0, PS, axis=1)
 

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import batched as BT
-from repro.core import hashing as H
+from repro.kernels import stats as KS
 from repro.kernels.probe.probe import (DEFAULT_KT, DEFAULT_TB,
                                        probe_lookup_kernel)
 
@@ -40,14 +40,8 @@ def _sorted_tiles(ht: BT.HashTable, keys, *, TB: int, KT: int):
 
 @functools.partial(jax.jit, static_argnames=("TB", "KT", "interpret",
                                              "use_kernel"))
-def probe_lookup(ht: BT.HashTable, keys, *, TB: int = DEFAULT_TB,
-                 KT: int = DEFAULT_KT, interpret: bool = False,
-                 use_kernel: bool = True):
-    """Wait-free batched lookup via the Pallas kernel (with jnp fallback for
-    unresolved keys).  Returns (found bool[B], slot int32[B]).
-
-    Drop-in equivalent of ``batched.find_batch`` (the ref.py oracle).
-    """
+def _probe_lookup_impl(ht: BT.HashTable, keys, *, TB: int, KT: int,
+                       interpret: bool, use_kernel: bool):
     keys = jnp.asarray(keys, jnp.uint32)
     m = BT.size(ht)
     B = keys.shape[0]
@@ -68,6 +62,25 @@ def probe_lookup(ht: BT.HashTable, keys, *, TB: int = DEFAULT_TB,
     found = jnp.where(resolved, found_k, found_fb)
     slot = jnp.where(resolved, slot_k, slot_fb)
     return found, slot
+
+
+def probe_lookup(ht: BT.HashTable, keys, *, TB: int = DEFAULT_TB,
+                 KT: int = DEFAULT_KT, interpret: bool = False,
+                 use_kernel: bool = True):
+    """Wait-free batched lookup via the Pallas kernel (with jnp fallback for
+    unresolved keys).  Returns (found bool[B], slot int32[B]).
+
+    Drop-in equivalent of ``batched.find_batch`` (the ref.py oracle).
+    Eager calls account the kernel's structural HBM traffic — two TB-cell
+    blocks of u32 staged per key tile — in ``kernels.stats``.
+    """
+    m = BT.size(ht)
+    B = jnp.shape(keys)[0]
+    if use_kernel and isinstance(m, int) and m % TB == 0 and m // TB >= 2:
+        nt = -(-B // KT)
+        KS.note_bytes("probe_bytes", nt * 2 * TB * 4)
+    return _probe_lookup_impl(ht, keys, TB=TB, KT=KT, interpret=interpret,
+                              use_kernel=use_kernel)
 
 
 def resolved_fraction(ht: BT.HashTable, keys, **kw):

@@ -1,13 +1,24 @@
-"""Pallas-TPU wait-free probe-lookup kernel.
+"""Pallas-TPU wait-free probe-lookup kernel (software-pipelined).
 
 TPU adaptation of the paper's lookup path (DESIGN.md §2): sequential linear
 probing touches one cache line per lookup; the TPU analog is one *VMEM tile*
 per lookup batch.  Keys are pre-sorted by hash (in the XLA wrapper, ops.py),
 so a tile of KT consecutive keys probes a narrow, contiguous region of the
-table.  For each key tile the kernel DMAs **two consecutive table blocks**
+table.  For each key tile the kernel stages **two consecutive table blocks**
 (TB cells each) HBM→VMEM — the block containing the tile's first hash
-position and its successor — via scalar-prefetched block indices feeding the
-BlockSpec index_map.
+position and its successor.
+
+The staging is a two-stage prefetch-ahead pipeline (Maier & Sanders: memory
+latency, not instruction count, dominates open-addressing probes — exactly
+what software pipelining hides): the table lives in HBM (``memory_space=
+ANY``) and the kernel issues the async copies for tile *t+1*'s window
+BEFORE probing tile *t*'s resident window, double-buffering two window
+slots with one DMA semaphore per (slot, block).  The grid is sequential on
+TPU, so slot ``t % 2`` is always started at step ``t-1`` (or the step-0
+warm-up) and waited exactly once at step ``t`` — by then the copy has had a
+full tile of probe compute to complete.  This replaces the previous
+two-block-window BlockSpec design (where the pipeline depth was whatever
+the Mosaic scheduler chose) with explicit prefetch-ahead reads.
 
 Each key then scans its probe window with vector compares out of VMEM.  TPU
 constraint honored: dynamic slicing happens only on the *sublane* dimension
@@ -42,22 +53,50 @@ BIG = 1 << 30  # python int: inlined as an immediate, not a captured const
 def _probe_kernel(bstart_ref,            # scalar prefetch: int32[nt]
                   keys_ref,              # uint32[1, KT]
                   hv_ref,                # int32[1, KT]
-                  tab0_ref,              # uint32[TB//128, 128] block b
-                  tab1_ref,              # uint32[TB//128, 128] block b+1
+                  tab_hbm,               # uint32[nb*TB//128, 128] HBM (ANY)
                   found_ref,             # int32[1, KT]
                   slot_ref,              # int32[1, KT]
                   resolved_ref,          # int32[1, KT]
-                  scratch_ref,           # uint32[2*TB//128, 128] VMEM
+                  win_ref,               # uint32[2, 2*TB//128, 128] VMEM
+                  sem,                   # DMA sem (2 slots, 2 blocks)
                   *, TB: int, KT: int, m: int):
     t = pl.program_id(0)
+    nt = pl.num_programs(0)
+    rpb = TB // LANES                              # rows per table block
+    total_rows = 2 * rpb
+    nb = m // TB
+
+    def start(tile, slot):
+        """Issue the two async block copies for ``tile``'s window into
+        window slot ``slot`` (block b and its wrap-around successor)."""
+        b0 = bstart_ref[tile]
+        b1 = jax.lax.rem(b0 + 1, nb)
+        pltpu.make_async_copy(tab_hbm.at[pl.ds(b0 * rpb, rpb), :],
+                              win_ref.at[slot, pl.ds(0, rpb), :],
+                              sem.at[slot, 0]).start()
+        pltpu.make_async_copy(tab_hbm.at[pl.ds(b1 * rpb, rpb), :],
+                              win_ref.at[slot, pl.ds(rpb, rpb), :],
+                              sem.at[slot, 1]).start()
+
+    # two-stage pipeline: warm-up fetch for tile 0; thereafter tile t issues
+    # tile t+1's copies BEFORE waiting on (then probing) its own window
+    @pl.when(t == 0)
+    def _warmup():
+        start(0, 0)
+
+    @pl.when(t + 1 < nt)
+    def _prefetch_next():
+        start(t + 1, jax.lax.rem(t + 1, 2))
+
+    slot = jax.lax.rem(t, 2)
+    pltpu.make_async_copy(tab_hbm.at[pl.ds(0, rpb), :],
+                          win_ref.at[slot, pl.ds(0, rpb), :],
+                          sem.at[slot, 0]).wait()
+    pltpu.make_async_copy(tab_hbm.at[pl.ds(0, rpb), :],
+                          win_ref.at[slot, pl.ds(rpb, rpb), :],
+                          sem.at[slot, 1]).wait()
+
     base = bstart_ref[t] * TB
-    rows_per_block = TB // LANES
-    total_rows = 2 * rows_per_block
-
-    # stage both table blocks contiguously
-    scratch_ref[pl.ds(0, rows_per_block), :] = tab0_ref[...]
-    scratch_ref[pl.ds(rows_per_block, rows_per_block), :] = tab1_ref[...]
-
     lane = jax.lax.broadcasted_iota(jnp.int32, (2, LANES), 1)
     rowi = jax.lax.broadcasted_iota(jnp.int32, (2, LANES), 0)
     lin = rowi * LANES + lane                      # probe-order linear index
@@ -68,7 +107,7 @@ def _probe_kernel(bstart_ref,            # scalar prefetch: int32[nt]
         off = hv - base                            # >= 0 (keys sorted)
         in_window = off < 2 * TB - LANES           # else: unresolved
         row = jnp.clip(off // LANES, 0, total_rows - 2)
-        win = scratch_ref[pl.ds(row, 2), :]        # [2, 128]
+        win = win_ref[slot, pl.ds(row, 2), :]      # [2, 128]
         # probe positions >= hv only
         gpos = row * LANES + lin                   # position within 2 blocks
         valid = gpos >= off
@@ -115,16 +154,17 @@ def probe_lookup_kernel(table, keys_sorted, hv_sorted, bstart, *,
         in_specs=[
             pl.BlockSpec((1, KT), lambda t, s: (t, 0)),
             pl.BlockSpec((1, KT), lambda t, s: (t, 0)),
-            pl.BlockSpec((TB // LANES, LANES), lambda t, s: (s[t], 0)),
-            pl.BlockSpec((TB // LANES, LANES),
-                         lambda t, s: ((s[t] + 1) % nb, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # whole table in HBM
         ],
         out_specs=[
             pl.BlockSpec((1, KT), lambda t, s: (t, 0)),
             pl.BlockSpec((1, KT), lambda t, s: (t, 0)),
             pl.BlockSpec((1, KT), lambda t, s: (t, 0)),
         ],
-        scratch_shapes=[pltpu.VMEM((2 * (TB // LANES), LANES), jnp.uint32)],
+        scratch_shapes=[
+            pltpu.VMEM((2, 2 * (TB // LANES), LANES), jnp.uint32),
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
     )
     kernel = functools.partial(_probe_kernel, TB=TB, KT=KT, m=m)
     found, slot, resolved = pl.pallas_call(
@@ -136,5 +176,5 @@ def probe_lookup_kernel(table, keys_sorted, hv_sorted, bstart, *,
             jax.ShapeDtypeStruct((nt, KT), jnp.int32),
         ],
         interpret=interpret,
-    )(bstart, keys2d, hv2d, table2d, table2d)
+    )(bstart, keys2d, hv2d, table2d)
     return found.reshape(-1), slot.reshape(-1), resolved.reshape(-1)

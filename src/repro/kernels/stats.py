@@ -1,0 +1,55 @@
+"""HBM bytes-moved accounting for the decode kernels (machine-independent
+perf counter, the kernel-layer twin of ``page_table.PROBE_STATS``).
+
+The Pallas kernels cannot increment a host counter from inside the grid, so
+the ops wrappers account *structurally*: from the concrete block table /
+positions they compute exactly how many bytes each dispatch DMAs HBM->VMEM
+(pages actually fetched, slot-index traffic, scale sidecars).  Only eager
+calls count — under jit the operands are tracers and the note is skipped —
+which is precisely what the ``*_bytes_per_token`` benchmarks want: a
+deterministic host-side replay, never a wall-clock measurement.
+
+Scoped the same way as ``PT.probe_stats_scope``: enter a scope, run the
+dispatches, read the per-category byte counts before the scope exits.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+import jax
+
+# bytes DMA'd HBM->VMEM by category:
+#   probe_bytes — slot-index / block-table traffic (the probe side: table
+#                 blocks for the probe kernel, block-table rows + the
+#                 materialized slot round-trip for the attention dispatch)
+#   attn_bytes  — K/V page payload (+ int8 scale sidecars)
+KERNEL_STATS = {"probe_bytes": 0, "attn_bytes": 0}
+
+
+def kernel_stats_reset() -> None:
+    for k in KERNEL_STATS:
+        KERNEL_STATS[k] = 0
+
+
+@contextlib.contextmanager
+def kernel_stats_scope() -> Iterator[dict]:
+    """Scoped byte accounting: inside the ``with`` block the counters start
+    at 0 and count only the scope's own (eager) dispatches; on exit the
+    enclosing values are RESTORED exactly, so one bench can never bleed
+    bytes into another.  Read the scoped counts from the yielded dict
+    *before* the block exits; scopes nest."""
+    outer = dict(KERNEL_STATS)
+    kernel_stats_reset()
+    try:
+        yield KERNEL_STATS
+    finally:
+        KERNEL_STATS.update(outer)
+
+
+def note_bytes(category: str, n) -> None:
+    try:
+        KERNEL_STATS[category] += int(n)
+    except (TypeError, jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        pass  # traced: byte counters only apply to eager replays

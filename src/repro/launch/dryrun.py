@@ -164,6 +164,11 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
         # the fused region applied, never a quiet fallback (--expect-fused)
         meta["decode_tp"] = "manual-fused" if fused else "gspmd"
         meta["megastep"] = megastep_tag
+        # whether decode attention lowered as the ONE-dispatch fused Pallas
+        # probe+attention kernel ("ok") or why not (reason string) — the
+        # artifact makes a quiet fallback red under --expect-fused-kernel
+        fk = EG._fused_kernel_reason(cfg, rules)
+        meta["fused_kernel"] = "ok" if fk is None else fk
         if cfg.family == "hybrid":
             # whether the mamba backbone lowered HEAD-SHARDED over model
             # (decode_ssm_tp) or as replicated redundant compute
@@ -217,6 +222,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str,
         if "decode_tp" in meta:
             rec["decode_tp"] = meta["decode_tp"]
             rec["megastep"] = meta["megastep"]
+            rec["fused_kernel"] = meta["fused_kernel"]
             if "mamba_tp" in meta:
                 rec["mamba_tp"] = meta["mamba_tp"]
         if verbose:
@@ -256,6 +262,11 @@ def main():
                     help="comma-separated archs whose decode cells MUST "
                          "take the fused manual-TP path (exit 1 on any "
                          "quiet gspmd fallback)")
+    ap.add_argument("--expect-fused-kernel", default="",
+                    help="comma-separated archs whose decode cells MUST "
+                         "lower the one-dispatch fused probe+attention "
+                         "Pallas kernel (artifact fused_kernel == 'ok'; "
+                         "exit 1 on any quiet two-dispatch fallback)")
     args = ap.parse_args()
 
     overrides = {}
@@ -309,7 +320,27 @@ def main():
         if not_fused:
             print("expect-fused VIOLATED (quiet gspmd fallback): "
                   + ", ".join(not_fused))
-    return 0 if n_err == 0 and not not_fused else 1
+    no_kernel = []
+    if args.expect_fused_kernel:
+        expect_k = {a.strip() for a in args.expect_fused_kernel.split(",")
+                    if a}
+        seen_k = set()
+        for r in results:
+            if (r["arch"] not in expect_k or r["status"] != "ok"
+                    or SHAPES[r["shape"]].kind != "decode"):
+                continue
+            seen_k.add(r["arch"])
+            if r.get("fused_kernel") != "ok":
+                no_kernel.append(f"{r['arch']}/{r['shape']}/{r['mesh']}"
+                                 f" (fused_kernel={r.get('fused_kernel')})")
+        # same vacuous-gate protection as --expect-fused: an expected arch
+        # with no ok decode cell must fail, not silently pass
+        for arch in sorted(expect_k - seen_k):
+            no_kernel.append(f"{arch}/<no ok decode cell>")
+        if no_kernel:
+            print("expect-fused-kernel VIOLATED (quiet two-dispatch "
+                  "fallback): " + ", ".join(no_kernel))
+    return 0 if n_err == 0 and not not_fused and not no_kernel else 1
 
 
 if __name__ == "__main__":

@@ -78,6 +78,7 @@ from repro.models import ssm
 from repro.serving import page_table as PT
 from repro.serving import paged
 from repro.core import batched as BT
+from repro.kernels.fused_decode.fused import fused_decode_kernel
 
 DEFAULT_PAGE_SIZE = 256
 
@@ -136,6 +137,47 @@ def _manual_decode_ok(cfg, rules) -> bool:
     """The fused manual-TP decode region applies (family supported AND the
     shape gate dist/tp.decode_manual_tp passes)."""
     return _manual_decode_reason(cfg, rules) is None
+
+
+def _fused_kernel_reason(cfg, rules) -> Optional[str]:
+    """Why decode attention does NOT run as the one-dispatch fused
+    probe+paged-attention Pallas kernel (kernels/fused_decode) — None when
+    it does.  Evaluated for whichever serve path (manual region or gspmd)
+    the step factory actually picks; a non-None reason with
+    ``cfg.fused_kernel=True`` is logged by the factories and recorded in
+    dry-run artifacts (``fused_kernel`` field), never silent."""
+    if not cfg.fused_kernel:
+        return "off (cfg.fused_kernel=False)"
+    if cfg.family == "ssm":
+        return "attention-free SSM stack: no paged decode attention"
+    if cfg.family == "encdec":
+        return "cross-attention decode state not wired to the fused kernel"
+    if rules is not None and _manual_decode_ok(cfg, rules):
+        if TP.decode_kv_rep(cfg, rules.mesh.shape["model"]) != 1:
+            return ("kv_rep>1: replicated-KV manual layout keeps the "
+                    "two-dispatch per-chip attend path")
+    return None
+
+
+def _fused_kernel_ok(cfg, rules) -> bool:
+    return _fused_kernel_reason(cfg, rules) is None
+
+
+def _kernel_interpret() -> bool:
+    """Pallas kernels run compiled on TPU, interpreted elsewhere (CI's fake
+    CPU devices) — resolved at trace time, never a silent wrong-backend."""
+    return jax.default_backend() != "tpu"
+
+
+def _local_block_table(bt, chip_idx, npr: int):
+    """Chip-local view of the RAW incremental block table for the fused
+    kernel: entries this chip owns (block distribution ``slot // npr ==
+    chip``, identical to ``paged.compact_local``/``write_token_kv``) become
+    local pool rows, everything else -1.  Liveness (``p·PS <= pos``) is
+    enforced in-kernel from ``positions`` — no materialized slots view, no
+    per-chip compaction pass."""
+    mine = (bt >= 0) & (bt // npr == chip_idx)
+    return jnp.where(mine, bt % npr, -1).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -279,7 +321,8 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
 
 
 def rebuild_page_table(state: Dict[str, Any], *, n_pages: Optional[int] = None,
-                       seed: Optional[int] = None) -> Dict[str, Any]:
+                       seed: Optional[int] = None,
+                       use_kernel: bool = False) -> Dict[str, Any]:
     """Section 4.3 ABORT recovery, live in serving: re-hash the page table
     (into ``n_pages`` cells — pass a larger pool to actually gain capacity;
     with tombstone reuse a same-size rebuild only changes the seed, since
@@ -320,7 +363,8 @@ def rebuild_page_table(state: Dict[str, Any], *, n_pages: Optional[int] = None,
         # every slot moved: rebuild the incremental cache from the fresh
         # table via the authoritative wait-free lookup
         state["block_table"] = PT.rebuild_block_table(
-            fresh, state["seq_ids"], state["block_table"].shape[1])
+            fresh, state["seq_ids"], state["block_table"].shape[1],
+            use_kernel=use_kernel)
     state["aborted"] = jnp.zeros_like(state["aborted"])
     return state
 
@@ -348,13 +392,13 @@ def _rope_single(cfg, x, positions, mrope=None):
 
 
 def _paged_attn_chip(cfg, x, ap, pool_k_l, pool_v_l, scales_l, lp_tree,
-                     write_slot, positions, mrope, *, axes_names, mesh,
-                     page_size, kv_sharded, q_sharded):
+                     write_slot, positions, mrope, bt, *, axes_names, mesh,
+                     page_size, kv_sharded, q_sharded, fused=False,
+                     interpret=False):
     """Runs per chip (inside shard_map or standalone)."""
     B = x.shape[0]
     npr = pool_k_l.shape[0]
     chip = _chip_idx(axes_names, mesh) if axes_names else jnp.int32(0)
-    lp = paged.LocalPages(*(t[0] for t in lp_tree))
 
     q, k, v = L.attn_qkv_decode(ap, x[:, 0])
     if axes_names and q_sharded:
@@ -370,9 +414,18 @@ def _paged_attn_chip(cfg, x, ap, pool_k_l, pool_v_l, scales_l, lp_tree,
         page_size, scales=scales_l)
 
     n_kv, G = cfg.n_kv, cfg.n_q // cfg.n_kv
-    qg = q.reshape(B, n_kv, G, cfg.hd)
-    o, m, l = paged.attend_local(qg, pool_k_l, pool_v_l, lp, positions,
-                                 page_size, scales=scales_l)
+    if fused:
+        # one Pallas dispatch: in-kernel block-table walk + double-buffered
+        # page DMA + attention partials (kernels/fused_decode)
+        local_bt = _local_block_table(bt, chip, npr)
+        o, m, l = fused_decode_kernel(q, pool_k_l, pool_v_l, local_bt,
+                                      positions, scales=scales_l,
+                                      partials=True, interpret=interpret)
+    else:
+        lp = paged.LocalPages(*(t[0] for t in lp_tree))
+        qg = q.reshape(B, n_kv, G, cfg.hd)
+        o, m, l = paged.attend_local(qg, pool_k_l, pool_v_l, lp, positions,
+                                     page_size, scales=scales_l)
     out = paged.merge_global(o, m, l, axes_names)    # [B,kv,G,hd] f32
     out = out.reshape(B, cfg.n_q, cfg.hd).astype(x.dtype)
 
@@ -390,15 +443,20 @@ def _paged_attn_chip(cfg, x, ap, pool_k_l, pool_v_l, scales_l, lp_tree,
 
 def paged_attn_op(cfg, rules, x, ap, pool_k_l, pool_v_l, lp_arrays,
                   write_slot, positions, mrope=None,
-                  page_size: int = DEFAULT_PAGE_SIZE, scales_l=None):
+                  page_size: int = DEFAULT_PAGE_SIZE, scales_l=None,
+                  bt=None, fused: bool = False, interpret: bool = False):
     """x [B,1,d]; pools [n_pages,...]; lp_arrays: LocalPages as [n_chips,CAP]
-    arrays.  Returns (attn_out [B,1,d], pool_k', pool_v', scales')."""
+    arrays (None when ``fused`` — the kernel walks the raw block table
+    ``bt`` int32[B, maxP] instead).  Returns (attn_out [B,1,d], pool_k',
+    pool_v', scales')."""
     if rules is None:
-        lp_tree = tuple(t[:1] for t in lp_arrays)
+        lp_tree = (None if lp_arrays is None
+                   else tuple(t[:1] for t in lp_arrays))
         return _paged_attn_chip(
             cfg, x, ap, pool_k_l, pool_v_l, scales_l, lp_tree, write_slot,
-            positions, mrope, axes_names=(), mesh=None, page_size=page_size,
-            kv_sharded=False, q_sharded=False)
+            positions, mrope, bt, axes_names=(), mesh=None,
+            page_size=page_size, kv_sharded=False, q_sharded=False,
+            fused=fused, interpret=interpret)
 
     mesh = rules.mesh
     axes_names = _mesh_axes(rules)
@@ -417,11 +475,13 @@ def paged_attn_op(cfg, rules, x, ap, pool_k_l, pool_v_l, lp_arrays,
             "bv": P("model", None) if kv_sharded else P()})
     pool_spec = P(axes_names, None, None, None)
     scale_spec = P(axes_names, None, None)
-    lp_specs = tuple(P(axes_names, None) for _ in lp_arrays)
+    lp_specs = (None if lp_arrays is None
+                else tuple(P(axes_names, None) for _ in lp_arrays))
 
     fn = functools.partial(
         _paged_attn_chip, cfg, axes_names=axes_names, mesh=mesh,
-        page_size=page_size, kv_sharded=kv_sharded, q_sharded=q_sharded)
+        page_size=page_size, kv_sharded=kv_sharded, q_sharded=q_sharded,
+        fused=fused, interpret=interpret)
     scales_spec = ((scale_spec, scale_spec) if scales_l is not None
                    else None)
     out_scales_spec = (scales_spec if scales_l is not None
@@ -430,11 +490,12 @@ def paged_attn_op(cfg, rules, x, ap, pool_k_l, pool_v_l, lp_arrays,
         fn, mesh=mesh,
         in_specs=(P(), ap_specs, pool_spec, pool_spec, scales_spec,
                   lp_specs, P(), P(),
-                  P() if mrope is not None else None),
+                  P() if mrope is not None else None,
+                  P() if bt is not None else None),
         out_specs=(P(), pool_spec, pool_spec, out_scales_spec),
         check_vma=False)
     return mapped(x, ap, pool_k_l, pool_v_l, scales_l, lp_arrays,
-                  write_slot, positions, mrope)
+                  write_slot, positions, mrope, bt)
 
 
 def compact_op(rules, slots, n_pages: int, cap: int):
@@ -514,6 +575,12 @@ def make_serve_step(cfg, *, S_max: int, rules=None,
                     page_size: int = DEFAULT_PAGE_SIZE):
     """Returns serve_step(params, state, tokens [B,1], positions [B],
     [mrope_positions]) -> (logits [B,V], state')."""
+    if cfg.fused_kernel and not _fused_kernel_ok(cfg, rules):
+        # never a silent fallback: the caller asked for the fused kernel
+        logger.warning(
+            "fused decode kernel unavailable for %s — %s; "
+            "using the two-dispatch attend path",
+            cfg.name, _fused_kernel_reason(cfg, rules))
     if rules is not None and _manual_decode_ok(cfg, rules):
         return _make_manual_serve_step(cfg, S_max=S_max, rules=rules,
                                        page_size=page_size)
@@ -566,6 +633,11 @@ def make_serve_megastep(cfg, *, S_max: int, K: int, rules=None,
     gspmd step.  The factory tags the returned fn with ``.megastep``
     (``"scan-K{K}"``) — recorded by dry-run artifacts so a silent fallback
     to per-token dispatch fails CI's ``--expect-fused``."""
+    if cfg.fused_kernel and not _fused_kernel_ok(cfg, rules):
+        logger.warning(
+            "fused decode kernel unavailable for %s — %s; "
+            "using the two-dispatch attend path",
+            cfg.name, _fused_kernel_reason(cfg, rules))
     if rules is not None and _manual_decode_ok(cfg, rules):
         return _make_manual_serve_megastep(cfg, S_max=S_max, K=K,
                                            rules=rules, page_size=page_size)
@@ -608,7 +680,7 @@ def _qkv_decode_shard(ap, x, kv_rep: int):
 
 def _paged_attn_shard(cfg, x, ap, pk, pv, scales, lp, write_slot, positions,
                       mrope, *, chip_pd, npr, page_size, pd_axes,
-                      kv_rep=1):
+                      kv_rep=1, fused_bt=None, interpret=False):
     """One attention sublayer inside the fused manual region, local head
     shard end-to-end: column-parallel QKV, KV write into the chip's own
     pages, per-chip paged attention over local (page, head) slices, lse
@@ -625,9 +697,17 @@ def _paged_attn_shard(cfg, x, ap, pk, pv, scales, lp, write_slot, positions,
                                           page_size, scales=scales)
     kv_l = k.shape[1]                              # n_kv·rep / tp
     G_l = q.shape[1] // kv_l                       # local group size
-    qg = q.reshape(B, kv_l, G_l, cfg.hd)           # grouping is head-local
-    o, m, l = paged.attend_local(qg, pk, pv, lp, positions, page_size,
-                                 scales=scales)
+    if fused_bt is not None:
+        # one Pallas dispatch per layer: in-kernel walk of the chip-local
+        # raw block table + double-buffered page DMA (kernels/fused_decode);
+        # same (o, m, l) partials contract as paged.attend_local
+        o, m, l = fused_decode_kernel(q, pk, pv, fused_bt, positions,
+                                      scales=scales, partials=True,
+                                      interpret=interpret)
+    else:
+        qg = q.reshape(B, kv_l, G_l, cfg.hd)       # grouping is head-local
+        o, m, l = paged.attend_local(qg, pk, pv, lp, positions, page_size,
+                                     scales=scales)
     out = paged.merge_global(o, m, l, pd_axes)     # heads never cross chips
     out = out.reshape(B, kv_l * G_l, cfg.hd).astype(x.dtype)
     y = jax.lax.psum(L.attn_out_decode(ap, out), "model")
@@ -684,6 +764,8 @@ def _manual_decode_parts(cfg, *, S_max: int, rules,
     ssm_tp = cfg.family == "hybrid" and TP.decode_ssm_tp(cfg, tp)
     maxP = -(-S_max // page_size)
     vocab_sharded = (not cfg.tie_embeddings) and cfg.vocab_size % tp == 0
+    use_fused = _fused_kernel_ok(cfg, rules)
+    interp = _kernel_interpret()
 
     def make_specs(params, state):
         pool_spec = P(None, pd_axes or None, None, "model", None)
@@ -720,8 +802,13 @@ def _manual_decode_parts(cfg, *, S_max: int, rules,
         (table, write_slot, aborts), bt = PT.alloc_step_incremental(
             state["table"], state["seq_ids"], positions,
             state["block_table"], page_size=page_size, active=act)
-        slots = PT.block_table_slots(bt, positions, page_size=page_size)
-        lp = paged.compact_local(slots, chip_pd, npr, cap)
+        if use_fused:
+            # the fused kernel walks the raw block table in-kernel: no
+            # materialized slots view, no per-chip compaction pass
+            lp, fused_bt = None, _local_block_table(bt, chip_pd, npr)
+        else:
+            slots = PT.block_table_slots(bt, positions, page_size=page_size)
+            lp, fused_bt = paged.compact_local(slots, chip_pd, npr, cap), None
         new_state["table"] = table
         new_state["block_table"] = bt
         new_state["aborted"] = state["aborted"] | aborts
@@ -729,7 +816,8 @@ def _manual_decode_parts(cfg, *, S_max: int, rules,
         attn = functools.partial(
             _paged_attn_shard, cfg, lp=lp, write_slot=write_slot,
             positions=positions, chip_pd=chip_pd, npr=npr,
-            page_size=page_size, pd_axes=pd_axes, kv_rep=kv_rep)
+            page_size=page_size, pd_axes=pd_axes, kv_rep=kv_rep,
+            fused_bt=fused_bt, interpret=interp)
 
         if cfg.pattern_local:
             x_out = _gemma_layers_shard(cfg, params, state, new_state,
@@ -991,16 +1079,20 @@ def _hybrid_layers_shard(cfg, params, state, new_state, x, attn,
 
 
 def _page_ops(cfg, state, positions, active, *, S_max, page_size, n_chips,
-              rules):
+              rules, fused=False):
     """Once-per-token page-table work: incremental allocation (only the
     page-boundary crossings probe the table) + the block-table read served
     from the persistent cache — O(crossings) probes instead of the
     O(B·max_pages) full re-probe (``PT.lookup_pages`` stays the
-    authoritative path for admission / rebuild / verification)."""
+    authoritative path for admission / rebuild / verification).  With
+    ``fused`` the slots view + per-chip compaction are skipped entirely:
+    the fused kernel walks the raw block table in-kernel."""
     maxP = -(-S_max // page_size)
     (table, write_slot, aborts), bt = PT.alloc_step_incremental(
         state["table"], state["seq_ids"], positions, state["block_table"],
         page_size=page_size, active=active)
+    if fused:
+        return table, write_slot, aborts, bt, None
     slots = PT.block_table_slots(bt, positions, page_size=page_size)
     B = positions.shape[0]
     cap = paged.capacity(B, maxP, n_chips,
@@ -1048,11 +1140,13 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
     new_state = dict(state)
     act = state["active"] & ~state["aborted"]
     aborts = jnp.zeros((B,), bool)
+    fused = _fused_kernel_ok(cfg, rules)
+    interp = _kernel_interpret()
 
     if cfg.family in ("dense", "moe", "vlm"):
         table, write_slot, aborts, bt, lp = _page_ops(
             cfg, state, positions, act, S_max=S_max, page_size=page_size,
-            n_chips=n_chips, rules=rules)
+            n_chips=n_chips, rules=rules, fused=fused)
         new_state["table"] = table
         new_state["block_table"] = bt
 
@@ -1060,7 +1154,9 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
             x, pools, ring, scales = _gemma_layers(cfg, params, state, x,
                                                    lp, write_slot,
                                                    positions, rules,
-                                                   page_size)
+                                                   page_size, bt=bt,
+                                                   fused=fused,
+                                                   interpret=interp)
             new_state["pools"] = pools
             new_state["ring_k"], new_state["ring_v"], new_state["ring_pos"] \
                 = ring
@@ -1074,7 +1170,8 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
                 h, pk, pv, sc = paged_attn_op(
                     cfg, rules, nn.rmsnorm(lp_params["ln1"], x), lp_params["attn"],
                     pk, pv, lp, write_slot, positions, mrope, page_size,
-                    scales_l=_scales_in(cfg, sk_l, sv_l))
+                    scales_l=_scales_in(cfg, sk_l, sv_l),
+                    bt=bt if fused else None, fused=fused, interpret=interp)
                 x = x + h
                 x = x + _mlp_or_moe(cfg, lp_params,
                                     nn.rmsnorm(lp_params["ln2"], x))
@@ -1102,7 +1199,7 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
     elif cfg.family == "hybrid":
         table, write_slot, aborts, bt, lp = _page_ops(
             cfg, state, positions, act, S_max=S_max, page_size=page_size,
-            n_chips=n_chips, rules=rules)
+            n_chips=n_chips, rules=rules, fused=fused)
         new_state["table"] = table
         new_state["block_table"] = bt
         every = cfg.shared_attn_every
@@ -1121,7 +1218,8 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
             h, pk_g, pv_g, sc = paged_attn_op(
                 cfg, rules, nn.rmsnorm(sp["ln1"], x), sp["attn"],
                 pk[g], pv[g], lp, write_slot, positions, None, page_size,
-                scales_l=_scales_in(cfg, sk[g], sv[g]))
+                scales_l=_scales_in(cfg, sk[g], sv[g]),
+                bt=bt if fused else None, fused=fused, interpret=interp)
             x = x + h
             x = x + L.mlp_apply(sp["mlp"], nn.rmsnorm(sp["ln2"], x))
             pk_out.append(pk_g)
@@ -1211,7 +1309,7 @@ def prepare_encdec_state(cfg, params, state, src_embeds, *, rules=None):
 
 
 def _gemma_layers(cfg, params, state, x, lp, write_slot, positions, rules,
-                  page_size):
+                  page_size, bt=None, fused=False, interpret=False):
     """gemma3 superblocks at decode: pattern_local ring layers + 1 paged."""
     pat = cfg.pattern_local
     group = pat + 1
@@ -1240,7 +1338,9 @@ def _gemma_layers(cfg, params, state, x, lp, write_slot, positions, rules,
         h, pk, pv, sc = paged_attn_op(cfg, rules, nn.rmsnorm(sub["ln1"], x),
                                       sub["attn"], pk, pv, lp, write_slot,
                                       positions, None, page_size,
-                                      scales_l=_scales_in(cfg, sk_l, sv_l))
+                                      scales_l=_scales_in(cfg, sk_l, sv_l),
+                                      bt=bt if fused else None, fused=fused,
+                                      interpret=interpret)
         x = x + h
         x = x + L.mlp_apply(sub["mlp"], nn.rmsnorm(sub["ln2"], x))
         return x, (jnp.stack(new_rk), jnp.stack(new_rv), pk, pv) + tuple(sc)

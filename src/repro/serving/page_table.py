@@ -183,17 +183,28 @@ def block_table_slots(block_table, positions, *,
 
 
 def rebuild_block_table(table: BT.HashTable, seq_ids,
-                        max_pages: int) -> jnp.ndarray:
+                        max_pages: int, *,
+                        use_kernel: bool = False) -> jnp.ndarray:
     """(Re)build block-table rows from the authoritative wait-free lookup —
     used on admission (a prefilled sequence brings pages with it), after a
     Section 4.3 ``rehash`` (every slot moved), and by the verification mode.
     Unlike ``lookup_pages`` this caches every present page regardless of the
     current position — liveness is applied at read time by
-    ``block_table_slots``."""
+    ``block_table_slots``.
+
+    ``use_kernel=True`` serves the bulk lookup through the Pallas
+    software-pipelined probe kernel (``kernels/probe``; unresolved tail
+    falls back to the same ``BT.find_batch`` oracle in-graph) — bitwise
+    the same rows, one VMEM-tiled sweep instead of B·max_pages gathers."""
     B = seq_ids.shape[0]
     logical = jnp.arange(max_pages, dtype=jnp.uint32)
     keys = page_key(seq_ids[:, None], logical[None, :]).reshape(-1)
-    found, slots = BT.find_batch(table, keys)
+    if use_kernel:
+        from repro.kernels.probe import ops as PK
+        found, slots = PK.probe_lookup(
+            table, keys, interpret=jax.default_backend() != "tpu")
+    else:
+        found, slots = BT.find_batch(table, keys)
     _note_probes(B * max_pages)
     return jnp.where(found, slots, -1).reshape(B, max_pages)
 

@@ -1,0 +1,160 @@
+"""Build-breaking AST lint: every ``shard_map`` region must be FULLY manual
+over all mesh axes, and every call site must route through the
+``repro.dist.compat`` facade.
+
+The pinned XLA rejects partially-auto shard_map regions that contain the
+chunked attention loops (see ``src/repro/dist/README.md``), so the repo's
+invariant is global: no region may carve out auto axes.  Concretely a
+violation is any of:
+
+  V1  a ``shard_map(...)`` call (direct or via ``functools.partial``)
+      passing ``axis_names=`` — the facade's default is *all* mesh axes;
+      naming a subset is exactly how a partially-auto region is made
+  V2  ditto for the legacy spellings ``auto=`` / ``check_rep=`` — those
+      bypass the facade's version shim
+  V3  importing shard_map from jax (``jax.experimental.shard_map`` or the
+      ``jax.shard_map`` attribute) anywhere outside ``dist/compat.py``
+
+Usage:
+  python -m tools.lint_manual_axes [paths...]     # default: src benchmarks
+  python -m tools.lint_manual_axes --self-test    # prove a seeded
+      violation turns the build red (CI runs this first)
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+
+FACADE = "dist/compat.py"
+BANNED_KWARGS = ("axis_names", "auto", "check_rep")
+
+
+def _is_shard_map_ref(node: ast.AST) -> bool:
+    """``shard_map`` / ``X.shard_map`` — a reference to the mapped entry
+    point, whether called directly or handed to functools.partial."""
+    if isinstance(node, ast.Name):
+        return node.id == "shard_map"
+    if isinstance(node, ast.Attribute):
+        return node.attr == "shard_map"
+    return False
+
+
+def lint_source(src: str, path: str) -> list[str]:
+    """Violations in one file as ``path:line: message`` strings."""
+    out = []
+    in_facade = path.replace("\\", "/").endswith(FACADE)
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [f"{path}:{e.lineno}: syntax error: {e.msg}"]
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and not in_facade:
+            if node.module and "shard_map" in node.module:
+                out.append(f"{path}:{node.lineno}: V3 import from "
+                           f"'{node.module}' — route shard_map through "
+                           "repro.dist.compat")
+        elif isinstance(node, ast.Import) and not in_facade:
+            for alias in node.names:
+                if "shard_map" in alias.name:
+                    out.append(f"{path}:{node.lineno}: V3 import of "
+                               f"'{alias.name}' — route shard_map through "
+                               "repro.dist.compat")
+        elif isinstance(node, ast.Attribute) and not in_facade:
+            if (node.attr == "shard_map"
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "jax"):
+                out.append(f"{path}:{node.lineno}: V3 jax.shard_map used "
+                           "directly — route through repro.dist.compat")
+        elif isinstance(node, ast.Call):
+            # direct call, or partial(shard_map, ...) where the kwargs ride
+            # on the partial call itself
+            targets_sm = _is_shard_map_ref(node.func) or any(
+                _is_shard_map_ref(a) for a in node.args)
+            if not targets_sm or in_facade:
+                continue  # the facade forwards axis_names/auto by design
+            for kw in node.keywords:
+                if kw.arg in BANNED_KWARGS:
+                    which = ("V1" if kw.arg == "axis_names" else "V2")
+                    out.append(
+                        f"{path}:{node.lineno}: {which} shard_map called "
+                        f"with {kw.arg}= — every region must be fully "
+                        "manual over all mesh axes (omit it; the facade "
+                        "defaults to all axes)")
+    return out
+
+
+def lint_paths(paths: list[str]) -> list[str]:
+    out = []
+    for root in paths:
+        p = Path(root)
+        files = [p] if p.is_file() else sorted(p.rglob("*.py"))
+        for f in files:
+            out.extend(lint_source(f.read_text(), str(f)))
+    return out
+
+
+_SEEDED_BAD = '''
+from repro.dist.compat import shard_map
+from jax.experimental.shard_map import shard_map as raw   # V3
+import functools, jax
+
+def f(fn, mesh, spec):
+    a = shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                  axis_names=("model",))                  # V1
+    b = functools.partial(shard_map, mesh=mesh, in_specs=(spec,),
+                          out_specs=spec, auto={"data"})  # V2
+    c = jax.shard_map(fn, mesh=mesh, in_specs=(spec,),    # V3
+                      out_specs=spec)
+    return a, b, c
+'''
+
+_SEEDED_GOOD = '''
+from repro.dist.compat import shard_map
+import functools
+
+def f(fn, mesh, spec):
+    a = shard_map(fn, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                  check_vma=False)
+    b = functools.partial(shard_map, mesh=mesh, in_specs=(spec,),
+                          out_specs=spec, check_vma=False)
+    return a, b
+'''
+
+
+def self_test() -> int:
+    """The lint must flag every seeded violation class and stay quiet on
+    the clean twin — proof the CI step can actually turn red."""
+    bad = lint_source(_SEEDED_BAD, "seeded_bad.py")
+    kinds = {line.split(": ")[1].split(" ")[0] for line in bad}
+    ok = kinds == {"V1", "V2", "V3"} and not lint_source(
+        _SEEDED_GOOD, "seeded_good.py")
+    print(f"self-test: {len(bad)} seeded violations flagged "
+          f"({', '.join(sorted(kinds)) or 'none'}); clean twin "
+          f"{'quiet' if ok else 'NOT quiet / classes missing'}")
+    for line in bad:
+        print("  ", line)
+    return 0 if ok else 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*", default=["src", "benchmarks"])
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    violations = lint_paths(args.paths or ["src", "benchmarks"])
+    if violations:
+        print(f"lint_manual_axes: {len(violations)} violations")
+        for line in violations:
+            print("  ", line)
+        return 1
+    print("lint_manual_axes: all shard_map regions fully manual "
+          f"({', '.join(args.paths or ['src', 'benchmarks'])})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
