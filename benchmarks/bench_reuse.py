@@ -41,6 +41,60 @@ def churn(module, m: int, working: int, rounds: int, seed: int = 0):
     return occ, rebuilds, aborts
 
 
+def _displacements(ht) -> np.ndarray:
+    """Probe length (displacement from home bucket) of every live cell —
+    the machine-independent lookup-cost profile of a table state."""
+    tab = np.asarray(ht.table)
+    m = tab.size
+    occ = (tab != BT.E.EMPTY) & (tab != BT.E.TOMBSTONE)
+    idx = np.nonzero(occ)[0]
+    if idx.size == 0:
+        return np.zeros((0,), np.int64)
+    keys = (tab[idx] >> 2).astype(np.uint32)
+    hv = np.asarray(BT._hash(ht, jnp.asarray(keys)))
+    return (idx - hv) % m
+
+
+def strategy_churn(m: int = 256, working: int = 96, rounds: int = 12,
+                   seed: int = 3) -> dict:
+    """The same fixed-working-set churn replayed under every probe strategy
+    (core/probe_strategies.py): per-strategy probe-length percentiles of
+    the final table and the tombstone-pressure curve (max / final count
+    over the run).  Seeded and eager — every number is deterministic, so
+    all of it is gated: robinhood must keep probe p99 <= linear's,
+    hopscotch must stay at 0 tombstones and probe lengths < H."""
+    from repro.core.probe_strategies import STRATEGIES, get_strategy
+    out = {}
+    for name in sorted(STRATEGIES):
+        impl = get_strategy(name)
+        ht = BT.create(m, seed=1, strategy=name)
+        rng = np.random.default_rng(seed)
+        keys = rng.choice(BT.E.MAX_KEY, size=working,
+                          replace=False).astype(np.uint32)
+        ht, _ = impl.insert_batch(ht, jnp.asarray(keys))
+        tombs_curve, aborts = [], 0
+        for _ in range(rounds):
+            victims = rng.choice(working, size=working // 4, replace=False)
+            ht, _ = impl.delete_batch(ht, jnp.asarray(keys[victims]))
+            fresh = rng.choice(BT.E.MAX_KEY, size=len(victims),
+                               replace=False).astype(np.uint32)
+            keys[victims] = fresh
+            ht, ret = impl.insert_batch(ht, jnp.asarray(fresh))
+            aborts += int((np.asarray(ret) == 2).sum())
+            tombs_curve.append(int(ht.num_tombs))
+        d = _displacements(ht)
+        out[name] = {
+            "probe_p50": float(np.percentile(d, 50)) if d.size else 0.0,
+            "probe_p99": float(np.percentile(d, 99)) if d.size else 0.0,
+            "tombs_max": max(tombs_curve),
+            "tombs_final": tombs_curve[-1],
+            "aborts": aborts,
+        }
+    assert out["hopscotch"]["tombs_max"] == 0, \
+        "hopscotch left tombstones under churn"
+    return out
+
+
 def page_churn(n_pages: int = 512, B: int = 16, page_size: int = 4,
                rounds: int = 40, seed: int = 1):
     """Same story on the paged-KV allocator: evict/admit sequences."""
@@ -115,11 +169,13 @@ def run(verbose: bool = True, fast: bool = False) -> dict:
     base_occ, rebuilds, _ = churn(GN, m, working, rounds)
     pocc = page_churn(rounds=15 if fast else 40)
     exhaust = page_exhaust_reclaim()
+    strategies = strategy_churn(rounds=8 if fast else 12)
     out = {"ours_final_occ": ours_occ[-1], "ours_max_occ": max(ours_occ),
            "ours_aborts": ours_aborts,
            "noreuse_rebuilds": rebuilds, "noreuse_final_occ": base_occ[-1],
            "page_table_max_occ": max(pocc),
-           "page_exhaust": exhaust}
+           "page_exhaust": exhaust,
+           "strategies": strategies}
     if verbose:
         print("bench_reuse — churn at fixed working set "
               f"(m={m}, live={working}, {rounds} rounds of 25% turnover)")
@@ -132,6 +188,11 @@ def run(verbose: bool = True, fast: bool = False) -> dict:
               f"(occupancy only grows; hits the 0.95 threshold)")
         print(f"  paged-KV  : page-slot occupancy <= {max(pocc):.3f} under "
               f"sequence churn; allocator never aborted")
+        for name, s in strategies.items():
+            print(f"  {name:<10}: probe p50/p99={s['probe_p50']:.0f}/"
+                  f"{s['probe_p99']:.0f}  tombs max/final="
+                  f"{s['tombs_max']}/{s['tombs_final']}  "
+                  f"aborts={s['aborts']}")
     assert ours_rebuilds == 0 and ours_aborts == 0, \
         "ours should sustain churn without rebuilds or aborts"
     assert rebuilds >= 1, "baseline should have needed a rebuild"

@@ -116,6 +116,63 @@ def bytes_per_token(B: int = 8, max_pages: int = 64, page_size: int = 4,
             "attn_bytes_reduction_x": two_attn / max(fused_attn, 1)}
 
 
+def strategy_page_churn(n_pages: int = 256, B: int = 8, page_size: int = 4,
+                        rounds: int = 10, seed: int = 2) -> dict:
+    """The decode-allocator eviction churn replayed through the strategy
+    facade (``PT.for_strategy``) for every probe strategy: per-strategy
+    probe-length p99 of the final pool and the tombstone-pressure curve.
+    Seeded eager replay — deterministic, gated: hopscotch must hold 0
+    tombstones while linear/robinhood carry the churn's tombstone load."""
+    from repro.core.probe_strategies import STRATEGIES
+    from repro.serving import page_table as PT
+
+    out = {}
+    for name in sorted(STRATEGIES):
+        pt = PT.for_strategy(name)
+        table = pt.create_table(n_pages)
+        rng = np.random.default_rng(seed)
+        pos = np.zeros(B, np.int32)
+        seq = np.arange(B, dtype=np.int32)
+        next_id = B
+        maxP = 16
+        tombs_curve, aborts = [], 0
+        for _ in range(rounds):
+            for _ in range(8):
+                st = pt.alloc_step(table, jnp.asarray(seq),
+                                   jnp.asarray(pos), page_size=page_size)
+                table = st.table
+                aborts += int(np.asarray(st.aborted).sum())
+                pos += 1
+            victims = rng.choice(B, size=B // 2, replace=False)
+            mask = np.zeros(B, bool)
+            mask[victims] = True
+            table = pt.free_sequences(table, jnp.asarray(seq),
+                                      jnp.asarray(pos),
+                                      page_size=page_size, max_pages=maxP,
+                                      active=jnp.asarray(mask))
+            for v in victims:
+                seq[v] = next_id
+                next_id += 1
+                pos[v] = 0
+            tombs_curve.append(int(table.num_tombs))
+        tab = np.asarray(table.table)
+        occ = (tab != BT.E.EMPTY) & (tab != BT.E.TOMBSTONE)
+        idx = np.nonzero(occ)[0]
+        if idx.size:
+            hv = np.asarray(BT._hash(
+                table, jnp.asarray((tab[idx] >> 2).astype(np.uint32))))
+            d = (idx - hv) % n_pages
+            p99 = float(np.percentile(d, 99))
+        else:
+            p99 = 0.0
+        out[name] = {"page_probe_p99": p99,
+                     "page_tombs_max": max(tombs_curve),
+                     "page_tombs_final": tombs_curve[-1],
+                     "page_aborts": aborts}
+    assert out["hopscotch"]["page_tombs_max"] == 0
+    return out
+
+
 def decode_tok_s(fast: bool) -> dict:
     """Decode megastep wall-clock tokens/s at K in {1, 4, 16} (smoke model,
     CPU — report-only like every wall-clock metric)."""
@@ -241,6 +298,7 @@ def run(verbose: bool = True, fast: bool = False) -> dict:
                      "mixed_Mops": B / t_mixed / 1e6})
     probes = probes_per_token()
     hbm = bytes_per_token()
+    strat = strategy_page_churn(rounds=6 if fast else 10)
     decode = decode_tok_s(fast)
     sched = sched_storm(fast)
     if verbose:
@@ -259,6 +317,11 @@ def run(verbose: bool = True, fast: bool = False) -> dict:
               f"{hbm['attn_bytes_per_token_twodispatch']:.0f} -> "
               f"{hbm['attn_bytes_per_token_fused']:.0f} "
               f"({hbm['attn_bytes_reduction_x']:.2f}x)")
+        for name, s in strat.items():
+            print(f"  alloc churn [{name}]: probe p99="
+                  f"{s['page_probe_p99']:.0f}  tombs max/final="
+                  f"{s['page_tombs_max']}/{s['page_tombs_final']}  "
+                  f"aborts={s['page_aborts']}")
         print("  decode megastep tok/s: "
               + "  ".join(f"K{k.split('_K')[1]}={v:.1f}"
                           for k, v in decode.items()))
@@ -271,4 +334,4 @@ def run(verbose: bool = True, fast: bool = False) -> dict:
               f"ttft p50/p99={sched['ttft_p50_steps']:.0f}/"
               f"{sched['ttft_p99_steps']:.0f} steps (report-only)")
     return {"rows": rows, "decode": {**probes, **hbm, **decode},
-            "sched": sched}
+            "strategies": strat, "sched": sched}

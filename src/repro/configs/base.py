@@ -72,6 +72,15 @@ class ModelConfig:
     # attend path.  Gated per path by serving/engine._fused_kernel_reason;
     # a fallback is always logged + surfaced in dryrun meta, never silent.
     fused_kernel: bool = False
+    # page-allocator probe strategy: "linear" (the paper's algorithm),
+    # "robinhood" (displacement-ordered claims) or "hopscotch"
+    # (neighborhood bitmaps, tombstone-free deletes) — see
+    # core/probe_strategies.py.  The strategy SEMANTICS always hold; paths
+    # a strategy cannot accelerate (the Pallas probe kernel assumes the
+    # linear scan) degrade to the jnp oracle, gated by
+    # serving/engine._probe_strategy_reason: logged + surfaced in dryrun
+    # meta via engine.fallback_report, never silent.
+    probe_strategy: str = "linear"
 
     @property
     def scan_unroll(self) -> int:

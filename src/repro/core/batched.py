@@ -27,6 +27,14 @@ Wait-free lookups are pure vectorized reads (no lane ever retries because of
 another lane's writes) — ``kernels/probe`` provides the Pallas VMEM-tiled
 version; this module is its jnp oracle and the general-purpose path.
 
+Probe strategies: every operation takes a static ``strategy`` keyword
+(default ``"linear"``).  The linear implementation lives inline below,
+bitwise-identical to its pre-ProbeStrategy form (pinned by the recorded-
+trace parity test); ``"robinhood"`` and ``"hopscotch"`` dispatch to
+``core/probe_strategies.py``.  ``HashTable.meta`` carries per-entry strategy
+metadata as one extra uint32 pytree leaf (hopscotch neighborhood bitmaps;
+empty for linear/robinhood).
+
 Keys must lie in ``[0, encoding.MAX_KEY)``.
 """
 from __future__ import annotations
@@ -48,14 +56,23 @@ class HashTable(NamedTuple):
     num_keys: jnp.ndarray   # int32: live keys
     num_tombs: jnp.ndarray  # int32: tombstones
     seed: jnp.ndarray       # int32: hash seed
+    meta: jnp.ndarray       # uint32[m] strategy metadata (uint32[0] if none)
 
 
-def create(m: int, seed: int = 0) -> HashTable:
+def _strategy_impl(strategy: str):
+    from repro.core import probe_strategies as PS  # lazy: avoids cycle
+    return PS.get_strategy(strategy)
+
+
+def create(m: int, seed: int = 0, strategy: str = "linear") -> HashTable:
+    meta = (jnp.zeros((0,), jnp.uint32) if strategy == "linear"
+            else _strategy_impl(strategy).init_meta(m))
     return HashTable(
         table=jnp.full((m,), E.EMPTY, dtype=jnp.uint32),
         num_keys=jnp.int32(0),
         num_tombs=jnp.int32(0),
         seed=jnp.int32(seed),
+        meta=meta,
     )
 
 
@@ -78,13 +95,16 @@ def _active_mask(B, active):
 # ---------------------------------------------------------------------------
 # Lookup — wait-free, read-only.
 
-def find_batch(ht: HashTable, keys,
-               active=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def find_batch(ht: HashTable, keys, active=None, *,
+               strategy: str = "linear") -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Return (found bool[B], slot int32[B]) — slot of <key, final>, or -1.
 
-    Scans each key's run in PROBE_CHUNK-cell windows until the key or an
-    EMPTY cell (end of run) is found.
+    Linear/robinhood scan each key's run in PROBE_CHUNK-cell windows until
+    the key or an EMPTY cell (end of run) is found; hopscotch gathers the
+    bitmap-indicated neighborhood instead (bounded).
     """
+    if strategy not in ("linear", "robinhood"):
+        return _strategy_impl(strategy).find_batch(ht, keys, active)
     keys = jnp.asarray(keys, dtype=jnp.uint32)
     m = size(ht)
     B = keys.shape[0]
@@ -123,9 +143,10 @@ def find_batch(ht: HashTable, keys,
     return found, slot
 
 
-def lookup_batch(ht: HashTable, keys, active=None) -> jnp.ndarray:
+def lookup_batch(ht: HashTable, keys, active=None, *,
+                 strategy: str = "linear") -> jnp.ndarray:
     """Wait-free batched lookup: present?"""
-    found, _ = find_batch(ht, keys, active)
+    found, _ = find_batch(ht, keys, active, strategy=strategy)
     return found
 
 
@@ -142,7 +163,8 @@ def _dedup_leaders(keys, act) -> jnp.ndarray:
 
 
 def insert_batch(ht: HashTable, keys, active=None,
-                 claim_tombstones: bool = True) -> Tuple[HashTable, jnp.ndarray]:
+                 claim_tombstones: bool = True, *,
+                 strategy: str = "linear") -> Tuple[HashTable, jnp.ndarray]:
     """Insert a batch; ret int32[B]: 1=true (inserted), 0=false (present or
     duplicate-in-batch or inactive), 2=ABORT (no available cell).
 
@@ -150,6 +172,9 @@ def insert_batch(ht: HashTable, keys, active=None,
     (Gao et al. / Maier et al.): tombstones accumulate and only EMPTY cells
     are claimable — the baseline the paper improves on (see
     core/baselines/gao_noreuse.py and the ``bench_reuse`` benchmark)."""
+    if strategy != "linear":
+        return _strategy_impl(strategy).insert_batch(ht, keys, active,
+                                                     claim_tombstones)
     keys = jnp.asarray(keys, dtype=jnp.uint32)
     m = size(ht)
     B = keys.shape[0]
@@ -214,8 +239,10 @@ def insert_batch(ht: HashTable, keys, active=None,
 # ---------------------------------------------------------------------------
 # Delete — find + tombstone.
 
-def delete_batch(ht: HashTable, keys,
-                 active=None) -> Tuple[HashTable, jnp.ndarray]:
+def delete_batch(ht: HashTable, keys, active=None, *,
+                 strategy: str = "linear") -> Tuple[HashTable, jnp.ndarray]:
+    if strategy not in ("linear", "robinhood"):
+        return _strategy_impl(strategy).delete_batch(ht, keys, active)
     keys = jnp.asarray(keys, dtype=jnp.uint32)
     m = size(ht)
     B = keys.shape[0]
@@ -235,16 +262,18 @@ def delete_batch(ht: HashTable, keys,
 # ---------------------------------------------------------------------------
 # Mixed batch + maintenance.
 
-def apply_batch(ht: HashTable, ops, keys):
+def apply_batch(ht: HashTable, ops, keys, *, strategy: str = "linear"):
     """ops int32[B] (spec.OP_*), keys uint32[B].  Linearization order:
     deletes < inserts < lookups (each group by batch index).
     Returns (ht', ret int32[B])."""
     from repro.core.spec import OP_DELETE, OP_INSERT
     ops = jnp.asarray(ops, jnp.int32)
     keys = jnp.asarray(keys, jnp.uint32)
-    ht, del_ret = delete_batch(ht, keys, active=(ops == OP_DELETE))
-    ht, ins_ret = insert_batch(ht, keys, active=(ops == OP_INSERT))
-    look_ret = lookup_batch(ht, keys).astype(jnp.int32)
+    ht, del_ret = delete_batch(ht, keys, active=(ops == OP_DELETE),
+                               strategy=strategy)
+    ht, ins_ret = insert_batch(ht, keys, active=(ops == OP_INSERT),
+                               strategy=strategy)
+    look_ret = lookup_batch(ht, keys, strategy=strategy).astype(jnp.int32)
     ret = jnp.where(ops == OP_DELETE, del_ret,
                     jnp.where(ops == OP_INSERT, ins_ret, look_ret))
     return ht, ret
@@ -269,12 +298,15 @@ def live_keys(ht: HashTable) -> jnp.ndarray:
 
 
 def rebuild(ht: HashTable, new_m: int,
-            new_seed: Optional[int] = None) -> HashTable:
+            new_seed: Optional[int] = None, *,
+            strategy: str = "linear") -> HashTable:
     """Resize/rebuild (Section 4.3: triggered by ABORTs; standard technique,
     orthogonal to the lock-free algorithm itself)."""
     keys_sorted, n_live = live_keys(ht)
-    fresh = create(new_m, int(ht.seed) if new_seed is None else new_seed)
+    fresh = create(new_m, int(ht.seed) if new_seed is None else new_seed,
+                   strategy=strategy)
     m = size(ht)
     fresh, _ = insert_batch(fresh, keys_sorted,
-                            active=(jnp.arange(m) < n_live))
+                            active=(jnp.arange(m) < n_live),
+                            strategy=strategy)
     return fresh

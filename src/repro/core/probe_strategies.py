@@ -1,0 +1,445 @@
+"""ProbeStrategy: pluggable probe order / claim arbitration / deletion mode.
+
+The batched table (``core/batched.py``) hard-codes the paper's linear probe:
+scan ``h(v), h(v)+1, ...``; claim EMPTY-or-TOMBSTONE cells with lowest-
+batch-index scatter-min arbitration; delete by tombstoning.  This module
+extracts that contract into a strategy object so the serving stack can pick
+the allocator behaviour per workload (PAPERS.md: Concurrent Robin Hood
+Hashing, Lock-Free Hopscotch Hashing).  Three strategies:
+
+``linear``
+    The paper's algorithm, bitwise-unchanged — ``batched.py`` keeps the
+    original implementation inline and this class merely delegates to it
+    (the recorded-trace parity test pins it to the pre-refactor behaviour).
+
+``robinhood``
+    Same probe sequence, same tombstone deletion, but the scatter-min
+    arbitration priority IS the displacement (distance already travelled
+    from the home bucket): a lane that has probed further wins contested
+    cells, with batch index only as the tiebreaker.  This is Robin Hood's
+    variance bound translated to the batched CAS analog — the existing
+    claim mechanism, a different priority key.  Lookup/deletion/ABORT
+    semantics are identical to linear, so the forecaster's exact no-ABORT
+    bound (free_cells = n_pages - live) carries over unchanged.
+
+``hopscotch``
+    Neighborhood hashing: ``meta[h]`` is a uint32 bitmap — bit ``d`` set
+    iff cell ``(h + d) mod m`` holds a key homed at ``h`` (``d < H``,
+    H = min(32, m)).  Lookups gather at most H bitmap-indicated cells —
+    bounded and wait-free (no EMPTY-terminated scan).  Deletes clear the
+    cell back to EMPTY and clear the home bit: NO tombstones, ever, so
+    ``free_cells`` counts EMPTY cells exactly.  Inserts claim the first
+    EMPTY cell inside the neighborhood (same scatter-min arbitration);
+    when the first EMPTY lies outside, the classic hop displacement walks
+    it backwards by relocating residents within their own neighborhoods.
+    Displacement can fail below full load, so unlike linear/robinhood,
+    ``free_cells > 0`` is NOT a sufficient no-ABORT condition — the
+    forecaster must keep ``forecast_slack()`` extra headroom and the
+    reactive §4.3 rebuild path stays live (see core/README.md).
+
+Concurrency note (honest scope): between batch applications the table is
+quiescent, so hopscotch's relocating delete/displacement run at batch
+boundaries with no concurrent readers — we get the *space* behaviour of
+Lock-Free Hopscotch (tombstone-free deletion, bounded lookups) without
+needing its in-flight COLLIDED/marker protocol.  The displacement loop
+resolves one lane per arbitration round; in-neighborhood claims stay fully
+data-parallel.
+
+Strategy identity is a STATIC Python string (never a pytree leaf): it is
+threaded as a keyword through ``batched.py`` / bound once into the
+``serving.page_table.PageTable`` facade, so jit caches one program per
+strategy and the HashTable pytree stays numeric-only.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batched as BT
+from repro.core import encoding as E
+
+# Hopscotch neighborhood size: capped by the uint32 bitmap carrier.  Tables
+# smaller than 32 cells use H = m (the neighborhood covers the whole table,
+# so displacement is never needed there).
+H_NEIGHBORHOOD = 32
+
+
+def _finalize_insert_ret(keys, act, leader, present, placed, aborted):
+    """Shared insert return-code post-processing (mirrors linear's inline
+    code): 1=inserted, 0=present/duplicate/inactive, 2=ABORT, with a
+    non-leader duplicate of an aborted leader also aborting."""
+    ret = jnp.zeros(keys.shape, jnp.int32)
+    ret = jnp.where(placed, 1, ret)
+    ret = jnp.where(aborted, 2, ret)
+    B = keys.shape[0]
+    eq = keys[None, :] == keys[:, None]
+    earlier = jnp.tril(jnp.ones((B, B), bool), k=-1)
+    leader_aborted = jnp.any(eq & earlier & aborted[None, :], axis=1)
+    ret = jnp.where(act & ~leader & ~present & leader_aborted, 2, ret)
+    return ret
+
+
+class ProbeStrategy:
+    """The contract a probe strategy must satisfy (see core/README.md):
+
+    * ``find_batch`` is WAIT-FREE: pure vectorized reads, no lane's result
+      depends on another lane's in-flight writes.
+    * ``insert_batch``/``delete_batch`` leave the table QUIESCENT and equal
+      to a sequential execution of some serialization of the batch; returns
+      match the by-batch-index serialization.
+    * ``num_keys``/``num_tombs`` counters stay exact, so the scheduler's
+      ``Headroom`` view is exact; ``forecast_slack`` states how much extra
+      headroom the forecaster must hold for the no-ABORT proof to apply.
+    """
+
+    name: str = ""
+    #: deletes leave TOMBSTONE cells (reused by inserts, Prop. 2)
+    uses_tombstones: bool = True
+    #: the Pallas probe kernel (kernels/probe) assumes this probe order
+    kernel_supported: bool = False
+
+    def forecast_slack(self, n_pages: int) -> int:
+        """Extra free cells the forecaster must hold beyond exact demand for
+        ``demand + slack <= free_cells`` to guarantee no ABORT."""
+        return 0
+
+    def init_meta(self, m: int) -> jnp.ndarray:
+        """Per-entry metadata arrays as one extra uint32 pytree leaf on
+        ``HashTable`` (empty for metadata-free strategies)."""
+        return jnp.zeros((0,), jnp.uint32)
+
+    def find_batch(self, ht, keys, active=None):
+        raise NotImplementedError
+
+    def insert_batch(self, ht, keys, active=None, claim_tombstones=True):
+        raise NotImplementedError
+
+    def delete_batch(self, ht, keys, active=None):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# linear — delegate to the inline implementation in batched.py.
+
+
+class LinearStrategy(ProbeStrategy):
+    name = "linear"
+    uses_tombstones = True
+    kernel_supported = True
+
+    def find_batch(self, ht, keys, active=None):
+        return BT.find_batch(ht, keys, active, strategy="linear")
+
+    def insert_batch(self, ht, keys, active=None, claim_tombstones=True):
+        return BT.insert_batch(ht, keys, active, claim_tombstones,
+                               strategy="linear")
+
+    def delete_batch(self, ht, keys, active=None):
+        return BT.delete_batch(ht, keys, active, strategy="linear")
+
+
+# ---------------------------------------------------------------------------
+# robinhood — linear probe, displacement-ordered claim arbitration.
+
+
+class RobinHoodStrategy(LinearStrategy):
+    name = "robinhood"
+    # the Pallas probe kernel only performs LOOKUPS, and robinhood lookups
+    # are bitwise the linear scan (claims only ever land on available cells
+    # walked in probe order, so a key's run still contains no EMPTY cell
+    # and the kernel's EMPTY-terminated sweep stays exact)
+    kernel_supported = True
+
+    def insert_batch(self, ht, keys, active=None, claim_tombstones=True):
+        """Linear's arbitration loop with displacement as the priority.
+
+        At every round each pending lane's displacement IS its cursor (it
+        has probed ``cursor`` cells past its home bucket), so the priority
+        key ``(m - 1 - cursor) * B + lane`` makes the furthest-travelled
+        lane win each contested cell under the same scatter-MIN, with batch
+        index as the tiebreaker.  Probe sequence, tombstone reuse, ABORT
+        condition and return codes are identical to linear."""
+        keys = jnp.asarray(keys, dtype=jnp.uint32)
+        m = BT.size(ht)
+        B = keys.shape[0]
+        # priority fits int32: displacement < m, tiebreak < B
+        assert m * B < 2**31, "robinhood priority key overflows int32"
+        act = BT._active_mask(B, active)
+        hv = BT._hash(ht, keys)
+        leader = BT._dedup_leaders(keys, act)
+        present, _ = self.find_batch(ht, keys, act)
+
+        lane = jnp.arange(B, dtype=jnp.int32)
+        sentinel = jnp.int32(m * B)
+
+        def cond(st):
+            table, cursor, pending, placed, aborted, tombs_used = st
+            return jnp.any(pending)
+
+        def body(st):
+            table, cursor, pending, placed, aborted, tombs_used = st
+            cand = jnp.mod(hv + cursor, m)
+            if claim_tombstones:
+                avail = E.is_available(table[cand]) & pending
+            else:
+                avail = (table[cand] == jnp.uint32(E.EMPTY)) & pending
+            disp = jnp.clip(cursor, 0, m - 1)
+            pri = (jnp.int32(m - 1) - disp) * B + lane
+            claim_idx = jnp.where(avail, cand, m)  # OOB -> dropped
+            claims = jnp.full((m,), sentinel, jnp.int32).at[claim_idx].min(
+                pri, mode="drop")
+            won = avail & (claims[cand] == pri)
+            was_tomb = won & (table[cand] == jnp.uint32(E.TOMBSTONE))
+            write_idx = jnp.where(won, cand, m)
+            table = table.at[write_idx].set((keys << 2) | E.TAG_FINAL,
+                                            mode="drop")
+            tombs_used = tombs_used + jnp.sum(was_tomb)
+            placed = placed | won
+            adv = pending & ~won
+            cursor = jnp.where(adv, cursor + 1, cursor)
+            ab = adv & (cursor >= m)
+            aborted = aborted | ab
+            pending = pending & ~won & ~ab
+            return table, cursor, pending, placed, aborted, tombs_used
+
+        st0 = (ht.table, jnp.zeros((B,), jnp.int32), leader & ~present,
+               jnp.zeros((B,), bool), jnp.zeros((B,), bool), jnp.int32(0))
+        table, _, _, placed, aborted, tombs_used = jax.lax.while_loop(
+            cond, body, st0)
+
+        ret = _finalize_insert_ret(keys, act, leader, present, placed,
+                                   aborted)
+        ht2 = ht._replace(table=table,
+                          num_keys=ht.num_keys + jnp.sum(placed),
+                          num_tombs=ht.num_tombs - tombs_used)
+        return ht2, ret
+
+
+# ---------------------------------------------------------------------------
+# hopscotch — neighborhood bitmaps, relocating tombstone-free deletes.
+
+
+class HopscotchStrategy(ProbeStrategy):
+    name = "hopscotch"
+    uses_tombstones = False
+    kernel_supported = False
+
+    def neighborhood(self, m: int) -> int:
+        return min(H_NEIGHBORHOOD, m)
+
+    def forecast_slack(self, n_pages: int) -> int:
+        # when the neighborhood covers the whole table, near-claim sees
+        # every EMPTY cell and inserts abort only on a truly full pool —
+        # free_cells is exact (Prop. 2 analog) and no slack is needed.
+        if n_pages <= H_NEIGHBORHOOD:
+            return 0
+        # otherwise displacement can fail with ~H contiguous live cells
+        # blocking a neighborhood even while free cells exist elsewhere;
+        # holding H cells of slack makes that practically unreachable (and
+        # the reactive rebuild path stays live regardless).
+        return H_NEIGHBORHOOD
+
+    def init_meta(self, m: int) -> jnp.ndarray:
+        return jnp.zeros((m,), jnp.uint32)
+
+    # -- lookup: gather <= H bitmap-indicated cells; wait-free, bounded.
+
+    def find_batch(self, ht, keys, active=None):
+        keys = jnp.asarray(keys, dtype=jnp.uint32)
+        m = BT.size(ht)
+        B = keys.shape[0]
+        Hn = self.neighborhood(m)
+        act = BT._active_mask(B, active)
+        hv = BT._hash(ht, keys)
+        d = jnp.arange(Hn, dtype=jnp.int32)
+        pos = jnp.mod(hv[:, None] + d[None, :], m)              # [B, Hn]
+        member = (jnp.right_shift(ht.meta[hv][:, None],
+                                  d[None, :].astype(jnp.uint32)) & 1) == 1
+        target = (keys << 2) | E.TAG_FINAL
+        hit = member & (ht.table[pos] == target[:, None]) & act[:, None]
+        found = jnp.any(hit, axis=1)
+        first = jnp.argmax(hit, axis=1)
+        slot = jnp.where(found,
+                         jnp.take_along_axis(pos, first[:, None],
+                                             axis=1)[:, 0],
+                         jnp.int32(-1))
+        return found, slot
+
+    # -- delete: cell -> EMPTY, clear the home bit.  No tombstones.
+
+    def delete_batch(self, ht, keys, active=None):
+        keys = jnp.asarray(keys, dtype=jnp.uint32)
+        m = BT.size(ht)
+        B = keys.shape[0]
+        act = BT._active_mask(B, active)
+        hv = BT._hash(ht, keys)
+        found, slot = self.find_batch(ht, keys, act)
+        leader = BT._dedup_leaders(keys, act)
+        win = found & leader
+        idx = jnp.where(win, slot, m)
+        table = ht.table.at[idx].set(jnp.uint32(E.EMPTY), mode="drop")
+        # winners hold distinct slots, so per home bucket each cleared bit
+        # is distinct and a scatter-ADD of powers of two equals the OR
+        d = jnp.mod(slot - hv, m).astype(jnp.uint32)
+        bit = jnp.left_shift(jnp.uint32(1), d)
+        clear = jnp.zeros((m,), jnp.uint32).at[
+            jnp.where(win, hv, m)].add(bit, mode="drop")
+        meta = ht.meta & ~clear
+        ret = win.astype(jnp.int32)
+        ht2 = ht._replace(table=table, meta=meta,
+                          num_keys=ht.num_keys - jnp.sum(win))
+        return ht2, ret
+
+    # -- insert: in-neighborhood scatter-min claims; hop displacement for
+    #    lanes whose first EMPTY lies outside, one lane per round.
+
+    def insert_batch(self, ht, keys, active=None, claim_tombstones=True):
+        # claim_tombstones is meaningless here (deletes never tombstone);
+        # accepted for API uniformity.
+        del claim_tombstones
+        keys = jnp.asarray(keys, dtype=jnp.uint32)
+        m = BT.size(ht)
+        B = keys.shape[0]
+        Hn = self.neighborhood(m)
+        act = BT._active_mask(B, active)
+        hv = BT._hash(ht, keys)
+        leader = BT._dedup_leaders(keys, act)
+        present, _ = self.find_batch(ht, keys, act)
+        lane = jnp.arange(B, dtype=jnp.int32)
+        target = (keys << 2) | E.TAG_FINAL
+        doff = jnp.arange(Hn, dtype=jnp.int32)
+
+        def near_claim(table, meta, pending):
+            """One data-parallel round of in-neighborhood claims."""
+            pos = jnp.mod(hv[:, None] + doff[None, :], m)       # [B, Hn]
+            empty = table[pos] == jnp.uint32(E.EMPTY)
+            has = jnp.any(empty, axis=1) & pending
+            first = jnp.argmax(empty, axis=1)
+            cand = jnp.take_along_axis(pos, first[:, None], axis=1)[:, 0]
+            claim_idx = jnp.where(has, cand, m)
+            claims = jnp.full((m,), B, jnp.int32).at[claim_idx].min(
+                lane, mode="drop")
+            won = has & (claims[cand] == lane)
+            table = table.at[jnp.where(won, cand, m)].set(target,
+                                                          mode="drop")
+            # same home bucket => same first-EMPTY target => one winner per
+            # bucket per round, so scatter-ADD of the bit equals the OR
+            bit = jnp.left_shift(jnp.uint32(1), first.astype(jnp.uint32))
+            setmask = jnp.zeros((m,), jnp.uint32).at[
+                jnp.where(won, hv, m)].add(bit, mode="drop")
+            meta = meta | setmask
+            return table, meta, pending & ~won, won
+
+        def displace_one(table, meta, b):
+            """Resolve lane ``b`` whose whole neighborhood is full: claim
+            the first EMPTY past the home bucket and hop it backwards by
+            relocating residents within their own neighborhoods.  Returns
+            (table, meta, placed_b, aborted_b)."""
+            if Hn >= m:
+                # the neighborhood covers the whole table, so near_claim
+                # sees every EMPTY cell: reaching here means the table is
+                # completely full -> ABORT (no displacement possible)
+                return table, meta, jnp.bool_(False), jnp.bool_(True)
+            home = hv[b]
+            idx = jnp.arange(m, dtype=jnp.int32)
+            dist_all = jnp.mod(idx - home, m)
+            dmin = jnp.min(jnp.where(table == jnp.uint32(E.EMPTY),
+                                     dist_all, m))
+            no_empty = dmin >= m  # table completely full -> ABORT
+            j0 = jnp.mod(home + jnp.minimum(dmin, m - 1), m)
+
+            off = jnp.arange(1, Hn, dtype=jnp.int32)
+
+            def hop_cond(st):
+                table, meta, j, dist_j, stuck = st
+                return (dist_j >= Hn) & ~stuck
+
+            def hop_body(st):
+                table, meta, j, dist_j, stuck = st
+                # candidates i = j - off: all non-EMPTY (j was the first
+                # EMPTY from home and dist_j >= Hn keeps them in [home, j))
+                i = jnp.mod(j - off, m)                          # [Hn-1]
+                rkeys = E.dec_key(table[i])
+                rhome = BT._hash(ht, rkeys)
+                movable = jnp.mod(j - rhome, m) < Hn
+                any_mov = jnp.any(movable)
+                # furthest-back movable resident maximizes progress
+                osel = jnp.max(jnp.where(movable, off, 0))
+                isel = jnp.mod(j - osel, m)
+                moved_key = E.dec_key(table[isel])
+                h_k = BT._hash(ht, moved_key[None])[0]
+                old_d = jnp.mod(isel - h_k, m).astype(jnp.uint32)
+                new_d = jnp.mod(j - h_k, m).astype(jnp.uint32)
+                table2 = table.at[j].set(table[isel]).at[isel].set(
+                    jnp.uint32(E.EMPTY))
+                mword = ((meta[h_k]
+                          & ~jnp.left_shift(jnp.uint32(1), old_d))
+                         | jnp.left_shift(jnp.uint32(1), new_d))
+                meta2 = meta.at[h_k].set(mword)
+                table = jnp.where(any_mov, table2, table)
+                meta = jnp.where(any_mov, meta2, meta)
+                j = jnp.where(any_mov, isel, j)
+                return (table, meta, j, jnp.mod(j - home, m),
+                        stuck | ~any_mov)
+
+            table, meta, j, dist_j, stuck = jax.lax.while_loop(
+                hop_cond, hop_body,
+                (table, meta, j0, jnp.mod(j0 - home, m), no_empty))
+            ok = ~stuck
+            table = jnp.where(ok, table.at[j].set(target[b]), table)
+            mword = meta[home] | jnp.left_shift(
+                jnp.uint32(1), dist_j.astype(jnp.uint32))
+            meta = jnp.where(ok, meta.at[home].set(mword), meta)
+            return table, meta, ok, ~ok
+
+        def cond(st):
+            table, meta, pending, placed, aborted = st
+            return jnp.any(pending)
+
+        def body(st):
+            table, meta, pending, placed, aborted = st
+            table, meta, pending, won = near_claim(table, meta, pending)
+            placed = placed | won
+
+            def with_hop(args):
+                table, meta, pending, placed, aborted = args
+                b = jnp.argmin(jnp.where(pending, lane, B))
+                table, meta, ok, bad = displace_one(table, meta, b)
+                placed = placed.at[b].set(placed[b] | ok)
+                aborted = aborted.at[b].set(aborted[b] | bad)
+                pending = pending.at[b].set(False)
+                return table, meta, pending, placed, aborted
+
+            # every near_claim round with an eligible lane places at least
+            # one lane (the global scatter-min winner); displacement only
+            # runs when NO lane can claim in-neighborhood
+            need_hop = ~jnp.any(won) & jnp.any(pending)
+            return jax.lax.cond(need_hop, with_hop, lambda a: a,
+                                (table, meta, pending, placed, aborted))
+
+        st0 = (ht.table, ht.meta, leader & ~present,
+               jnp.zeros((B,), bool), jnp.zeros((B,), bool))
+        table, meta, _, placed, aborted = jax.lax.while_loop(cond, body, st0)
+
+        ret = _finalize_insert_ret(keys, act, leader, present, placed,
+                                   aborted)
+        ht2 = ht._replace(table=table, meta=meta,
+                          num_keys=ht.num_keys + jnp.sum(placed))
+        return ht2, ret
+
+
+STRATEGIES: Dict[str, ProbeStrategy] = {
+    s.name: s for s in (LinearStrategy(), RobinHoodStrategy(),
+                        HopscotchStrategy())
+}
+
+
+def get_strategy(name: str) -> ProbeStrategy:
+    try:
+        return STRATEGIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown probe strategy {name!r}; expected one of "
+            f"{sorted(STRATEGIES)}") from None

@@ -59,7 +59,8 @@ def shard_of(keys, num_shards: int):
 def _local_view(st: ShardedTable) -> BT.HashTable:
     """Per-device view inside shard_map: leading shard dim of size 1."""
     return BT.HashTable(table=st.table[0], num_keys=st.num_keys[0],
-                        num_tombs=st.num_tombs[0], seed=st.seed[0])
+                        num_tombs=st.num_tombs[0], seed=st.seed[0],
+                        meta=jnp.zeros((0,), jnp.uint32))
 
 
 def _pack_local(ht: BT.HashTable) -> ShardedTable:

@@ -66,14 +66,29 @@ def _probe_lookup_impl(ht: BT.HashTable, keys, *, TB: int, KT: int,
 
 def probe_lookup(ht: BT.HashTable, keys, *, TB: int = DEFAULT_TB,
                  KT: int = DEFAULT_KT, interpret: bool = False,
-                 use_kernel: bool = True):
+                 use_kernel: bool = True, strategy: str = "linear"):
     """Wait-free batched lookup via the Pallas kernel (with jnp fallback for
     unresolved keys).  Returns (found bool[B], slot int32[B]).
 
     Drop-in equivalent of ``batched.find_batch`` (the ref.py oracle).
     Eager calls account the kernel's structural HBM traffic — two TB-cell
     blocks of u32 staged per key tile — in ``kernels.stats``.
+
+    The kernel walks the LINEAR probe run from the home block, so it serves
+    exactly the strategies whose lookup scan is bitwise the linear one
+    (``kernel_supported``: "linear", and "robinhood" — displacement only
+    reorders claim priority, never the probe sequence).  Passing a strategy
+    with a different lookup shape (hopscotch's neighborhood gather) raises:
+    the page-table facade (``serving.page_table.PageTable``) gates this
+    upstream and falls back to the jnp oracle instead.
     """
+    if strategy != "linear":
+        from repro.core.probe_strategies import get_strategy
+        if not get_strategy(strategy).kernel_supported:
+            raise ValueError(
+                f"probe_lookup: strategy {strategy!r} does not probe in "
+                f"linear order — use the strategy's find_batch (the facade "
+                f"routes this automatically)")
     m = BT.size(ht)
     B = jnp.shape(keys)[0]
     if use_kernel and isinstance(m, int) and m % TB == 0 and m // TB >= 2:

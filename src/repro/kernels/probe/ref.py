@@ -14,5 +14,6 @@ def probe_lookup_ref(table: jnp.ndarray, keys: jnp.ndarray, seed: int):
     """table: uint32[m] quiescent cells; keys: uint32[B].
     Returns (found bool[B], slot int32[B])."""
     ht = BT.HashTable(table=table, num_keys=jnp.int32(0),
-                      num_tombs=jnp.int32(0), seed=jnp.int32(seed))
+                      num_tombs=jnp.int32(0), seed=jnp.int32(seed),
+                      meta=jnp.zeros((0,), jnp.uint32))
     return BT.find_batch(ht, keys)

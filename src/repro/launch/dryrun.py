@@ -160,15 +160,23 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
             "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
             "kind": shape.kind}
     if shape.kind == "decode":
-        # which TP path the cell actually lowered — artifacts must prove
-        # the fused region applied, never a quiet fallback (--expect-fused)
-        meta["decode_tp"] = "manual-fused" if fused else "gspmd"
+        # every gated fast-path fallback from ONE structure
+        # (engine.fallback_report — the same reason functions the step
+        # factories log from): artifacts must prove the fast paths applied,
+        # never a quiet fallback (--expect-fused / --expect-fused-kernel).
+        # Evaluated against the manual rules — the gate that decided which
+        # rules this cell lowered under — so decode_tp matches the path.
+        report = EG.fallback_report(cfg, man_rules)
+        meta["decode_tp"] = ("manual-fused" if report["decode_tp"] == "ok"
+                             else "gspmd")
         meta["megastep"] = megastep_tag
-        # whether decode attention lowered as the ONE-dispatch fused Pallas
-        # probe+attention kernel ("ok") or why not (reason string) — the
-        # artifact makes a quiet fallback red under --expect-fused-kernel
-        fk = EG._fused_kernel_reason(cfg, rules)
-        meta["fused_kernel"] = "ok" if fk is None else fk
+        # "ok" or the reason decode attention did NOT lower as the
+        # one-dispatch fused Pallas probe+attention kernel
+        meta["fused_kernel"] = report["fused_kernel"]
+        # "<name>: ok" or "<name>: <reason>" — which allocator probe
+        # strategy the cell serves and whether any accelerated path
+        # degraded to the jnp oracle for it
+        meta["probe_strategy"] = report["probe_strategy"]
         if cfg.family == "hybrid":
             # whether the mamba backbone lowered HEAD-SHARDED over model
             # (decode_ssm_tp) or as replicated redundant compute
@@ -223,6 +231,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str,
             rec["decode_tp"] = meta["decode_tp"]
             rec["megastep"] = meta["megastep"]
             rec["fused_kernel"] = meta["fused_kernel"]
+            rec["probe_strategy"] = meta["probe_strategy"]
             if "mamba_tp" in meta:
                 rec["mamba_tp"] = meta["mamba_tp"]
         if verbose:
@@ -313,6 +322,13 @@ def main():
                 # the K-token scan dispatch silently degraded to per-token
                 not_fused.append(f"{r['arch']}/{r['shape']}/{r['mesh']}"
                                  f" (megastep={r.get('megastep')})")
+            elif not str(r.get("probe_strategy", ": ok")).endswith(": ok"):
+                # a requested probe strategy quietly degraded an
+                # accelerated path to the jnp oracle — same fallback
+                # discipline as the TP region (engine.fallback_report)
+                not_fused.append(f"{r['arch']}/{r['shape']}/{r['mesh']}"
+                                 f" (probe_strategy="
+                                 f"{r.get('probe_strategy')})")
         # an expected arch with NO ok decode cell (typo / rename / all
         # skipped) must fail too, or the gate is silently vacuous
         for arch in sorted(expect - seen):

@@ -35,6 +35,7 @@ Usage (CPU smoke):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +66,11 @@ class ContinuousBatcher:
         self.K = max(1, int(megastep_k))
         self.verify = verify_block_table
         self.auto_refill = auto_refill
+        # one facade bound to cfg's probe strategy — every PT call below
+        # goes through it so the allocator semantics (and the Headroom
+        # slack the scheduler consumes) stay consistent per config
+        self.strategy = getattr(cfg, "probe_strategy", "linear")
+        self.pt = PT.for_strategy(self.strategy)
         self.state, _ = EG.make_decode_state(cfg, batch, S_max=max_len,
                                              rules=rules,
                                              page_size=page_size,
@@ -72,7 +78,7 @@ class ContinuousBatcher:
         self.state["active"] = jnp.zeros((batch,), bool)  # no lanes seated
         self.mega_fn = jax.jit(EG.make_serve_megastep(
             cfg, S_max=max_len, K=self.K, rules=rules, page_size=page_size))
-        pool = EG.decode_headroom(self.state)
+        pool = EG.decode_headroom(self.state, strategy=self.strategy)
         self.sched = scheduler or Scheduler(
             slots=batch, page_size=page_size, max_len=max_len,
             megastep_k=self.K)
@@ -102,12 +108,12 @@ class ContinuousBatcher:
     def table_stats(self):
         if "table" not in self.state:
             return None
-        return PT.stats(self.state["table"])
+        return self.pt.stats(self.state["table"])
 
     # -- the round --------------------------------------------------------
 
     def _check_block_table(self):
-        mism = int(PT.verify_block_table(
+        mism = int(self.pt.verify_block_table(
             self.state["table"], self.state["seq_ids"],
             jnp.asarray(self.pos), self.state["block_table"],
             page_size=self.page_size))
@@ -171,11 +177,11 @@ class ContinuousBatcher:
             mask[evict] = True
             dmask = jnp.asarray(mask)
             maxP = -(-self.max_len // self.page_size)
-            self.state["table"] = PT.free_sequences(
+            self.state["table"] = self.pt.free_sequences(
                 self.state["table"], self.state["seq_ids"],
                 jnp.asarray(self.pos), page_size=self.page_size,
                 max_pages=maxP, active=dmask)
-            self.state["block_table"] = PT.invalidate_block_rows(
+            self.state["block_table"] = self.pt.invalidate_block_rows(
                 self.state["block_table"], dmask)
         if evict:
             active = np.asarray(self.state["active"]).copy()
@@ -185,7 +191,8 @@ class ContinuousBatcher:
             # PROACTIVE Section 4.3 rebuild: before the abort, between
             # megasteps — the wait-free read path never sees it mid-flight
             self.state = EG.rebuild_page_table(self.state,
-                                               n_pages=plan.grow_to)
+                                               n_pages=plan.grow_to,
+                                               strategy=self.strategy)
         if plan.admissions:
             seq_ids = np.asarray(self.state["seq_ids"]).copy()
             active = np.asarray(self.state["active"]).copy()
@@ -265,10 +272,12 @@ class ContinuousBatcher:
                 # re-issued by the next megastep at the frozen positions
                 n_pages = self.state["pools"].k.shape[1]
                 self.state = EG.rebuild_page_table(self.state,
-                                                   n_pages=n_pages * 2)
+                                                   n_pages=n_pages * 2,
+                                                   strategy=self.strategy)
                 self.sched.note_aborts(n_ab, grew_to=n_pages * 2)
-            plan = self.sched.plan_round(self.pos,
-                                         EG.decode_headroom(self.state))
+            plan = self.sched.plan_round(
+                self.pos,
+                EG.decode_headroom(self.state, strategy=self.strategy))
             self._apply_plan(plan)
             probed = ps["keys_probed"]
         self.sched.end_round(keys_probed=probed)
@@ -322,10 +331,17 @@ def main():
     ap.add_argument("--verify-block-table", action="store_true",
                     help="CI/debug: check the incremental block-table "
                          "cache against the wait-free lookup every round")
+    ap.add_argument("--probe-strategy", default="linear",
+                    choices=["linear", "robinhood", "hopscotch"],
+                    help="page-allocator probe strategy (cfg.probe_strategy;"
+                         " hopscotch = tombstone-free deletes + scheduler "
+                         "slack, see core/probe_strategies.py)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.probe_strategy != cfg.probe_strategy:
+        cfg = dataclasses.replace(cfg, probe_strategy=args.probe_strategy)
     model = get_model(cfg)
     params, _ = model.init(cfg, jax.random.PRNGKey(0))
 

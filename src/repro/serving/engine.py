@@ -163,6 +163,47 @@ def _fused_kernel_ok(cfg, rules) -> bool:
     return _fused_kernel_reason(cfg, rules) is None
 
 
+def _probe_strategy_reason(cfg, rules=None) -> Optional[str]:
+    """Why ``cfg.probe_strategy`` runs without full fast-path acceleration —
+    None when fully served.  The strategy SEMANTICS (probe order, claim
+    arbitration, deletion mode, metadata) are ALWAYS honoured by the jnp
+    allocator — the scheduler's accounting depends on them — so unlike
+    ``tp_impl``/``fused_kernel`` this gate never swaps the strategy out; it
+    reports which accelerated path degrades to the oracle (logged by the
+    step factories, recorded per-cell by dryrun via ``fallback_report``)."""
+    from repro.core.probe_strategies import get_strategy
+    impl = get_strategy(cfg.probe_strategy)  # raises on unknown names
+    if not impl.kernel_supported:
+        return ("Pallas probe kernel assumes the linear probe order: bulk "
+                "block-table rebuilds serve from the jnp oracle")
+    return None
+
+
+def _pt(cfg) -> PT.PageTable:
+    """The strategy-bound page-table facade for this config."""
+    return PT.for_strategy(cfg.probe_strategy)
+
+
+def fallback_report(cfg, rules=None) -> Dict[str, str]:
+    """Every gated fast-path fallback in ONE structure: the single source
+    consumed by dry-run cell meta and the ``--expect-*`` CI gates (the step
+    factories log from the same reason functions, so a logged fallback can
+    never diverge from the recorded one).  Values are ``"ok"`` or the
+    fallback reason; ``probe_strategy`` is prefixed with the requested
+    strategy name so artifacts show WHAT ran, not just whether it
+    degraded."""
+    manual = _manual_decode_reason(cfg, rules) if rules is not None else None
+    strat_reason = _probe_strategy_reason(cfg, rules)
+    return {
+        "decode_tp": "ok" if manual is None else manual,
+        "fused_kernel": ("ok" if _fused_kernel_ok(cfg, rules)
+                         else _fused_kernel_reason(cfg, rules)),
+        "probe_strategy": (f"{cfg.probe_strategy}: ok"
+                           if strat_reason is None
+                           else f"{cfg.probe_strategy}: {strat_reason}"),
+    }
+
+
 def _kernel_interpret() -> bool:
     """Pallas kernels run compiled on TPU, interpreted elsewhere (CI's fake
     CPU devices) — resolved at trace time, never a silent wrong-backend."""
@@ -241,7 +282,7 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
             "aborted": jnp.zeros((B,), bool),
         }
         if n_paged:
-            state["table"] = PT.create_table(n_pages)
+            state["table"] = _pt(cfg).create_table(n_pages)
             # incremental block-table cache: scatter-updated at page-boundary
             # crossings, (re)built from the wait-free lookup on admission /
             # rebuild only (see page_table.alloc_step_incremental)
@@ -277,7 +318,7 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
                             "active": (None,), "aborted": (None,)}
     if n_paged:
         axes["table"] = BT.HashTable(table=(None,), num_keys=(),
-                                     num_tombs=(), seed=())
+                                     num_tombs=(), seed=(), meta=(None,))
         axes["block_table"] = (None, None)
         pool_ax = paged.POOL_AXES_TP if manual_tp else paged.POOL_AXES
         axes["pools"] = paged.PagedPools(k=pool_ax, v=pool_ax)
@@ -322,7 +363,8 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
 
 def rebuild_page_table(state: Dict[str, Any], *, n_pages: Optional[int] = None,
                        seed: Optional[int] = None,
-                       use_kernel: bool = False) -> Dict[str, Any]:
+                       use_kernel: bool = False,
+                       strategy: str = "linear") -> Dict[str, Any]:
     """Section 4.3 ABORT recovery, live in serving: re-hash the page table
     (into ``n_pages`` cells — pass a larger pool to actually gain capacity;
     with tombstone reuse a same-size rebuild only changes the seed, since
@@ -334,9 +376,18 @@ def rebuild_page_table(state: Dict[str, Any], *, n_pages: Optional[int] = None,
     rebuild cost is amortized exactly as in the paper.  ``n_pages`` must
     keep the pool divisible by the mesh's chip/page-shard count."""
     table = state["table"]
+    pt = PT.for_strategy(strategy)
+    # metadata-carrying strategies (hopscotch) and metadata-free ones build
+    # different meta leaves: rebuilding with the wrong strategy would
+    # silently corrupt the table
+    if (table.meta.size > 0) != (pt.create_table(1).meta.size > 0):
+        raise ValueError(
+            f"rebuild_page_table: state's table metadata does not match "
+            f"strategy {strategy!r} — pass the strategy the state was "
+            f"built with (cfg.probe_strategy)")
     m = BT.size(table)
     new_m = m if n_pages is None else n_pages
-    fresh, old_slots, new_slots, live = PT.rehash(table, new_m, seed)
+    fresh, old_slots, new_slots, live = pt.rehash(table, new_m, seed)
     if bool(jnp.any(live & (new_slots < 0))):
         # a live key failed to land (n_pages smaller than the live set):
         # proceeding would orphan pages and wrap dst=-1 into the last row
@@ -362,20 +413,23 @@ def rebuild_page_table(state: Dict[str, Any], *, n_pages: Optional[int] = None,
     if "block_table" in state:
         # every slot moved: rebuild the incremental cache from the fresh
         # table via the authoritative wait-free lookup
-        state["block_table"] = PT.rebuild_block_table(
+        state["block_table"] = pt.rebuild_block_table(
             fresh, state["seq_ids"], state["block_table"].shape[1],
             use_kernel=use_kernel)
     state["aborted"] = jnp.zeros_like(state["aborted"])
     return state
 
 
-def decode_headroom(state: Dict[str, Any]) -> Optional[PT.Headroom]:
+def decode_headroom(state: Dict[str, Any],
+                    strategy: str = "linear") -> Optional[PT.Headroom]:
     """First-class occupancy/headroom read of a decode state's page pool
     (None for attention-free families) — the proactive scheduler's
-    observation input.  See ``page_table.headroom``."""
+    observation input.  ``strategy`` fills the per-strategy ``slack`` field
+    the forecaster adds to its no-ABORT gate.  See
+    ``page_table.headroom``."""
     if "table" not in state:
         return None
-    return PT.headroom(state["table"])
+    return PT.for_strategy(strategy).headroom(state["table"])
 
 
 # ---------------------------------------------------------------------------
@@ -581,6 +635,12 @@ def make_serve_step(cfg, *, S_max: int, rules=None,
             "fused decode kernel unavailable for %s — %s; "
             "using the two-dispatch attend path",
             cfg.name, _fused_kernel_reason(cfg, rules))
+    if _probe_strategy_reason(cfg, rules) is not None:
+        # the strategy itself still runs (jnp allocator); only the probe
+        # kernel surface degrades — logged, mirrored in fallback_report
+        logger.warning(
+            "probe strategy %s partially degraded for %s — %s",
+            cfg.probe_strategy, cfg.name, _probe_strategy_reason(cfg, rules))
     if rules is not None and _manual_decode_ok(cfg, rules):
         return _make_manual_serve_step(cfg, S_max=S_max, rules=rules,
                                        page_size=page_size)
@@ -638,6 +698,10 @@ def make_serve_megastep(cfg, *, S_max: int, K: int, rules=None,
             "fused decode kernel unavailable for %s — %s; "
             "using the two-dispatch attend path",
             cfg.name, _fused_kernel_reason(cfg, rules))
+    if _probe_strategy_reason(cfg, rules) is not None:
+        logger.warning(
+            "probe strategy %s partially degraded for %s — %s",
+            cfg.probe_strategy, cfg.name, _probe_strategy_reason(cfg, rules))
     if rules is not None and _manual_decode_ok(cfg, rules):
         return _make_manual_serve_megastep(cfg, S_max=S_max, K=K,
                                            rules=rules, page_size=page_size)
@@ -799,7 +863,7 @@ def _manual_decode_parts(cfg, *, S_max: int, rules,
         # once per token, identical on every chip: incremental allocation
         # (only crossings probe) + the cached block-table read; the paper's
         # wait-free lookup stays authoritative for admission/rebuild
-        (table, write_slot, aborts), bt = PT.alloc_step_incremental(
+        (table, write_slot, aborts), bt = _pt(cfg).alloc_step_incremental(
             state["table"], state["seq_ids"], positions,
             state["block_table"], page_size=page_size, active=act)
         if use_fused:
@@ -1088,7 +1152,7 @@ def _page_ops(cfg, state, positions, active, *, S_max, page_size, n_chips,
     ``fused`` the slots view + per-chip compaction are skipped entirely:
     the fused kernel walks the raw block table in-kernel."""
     maxP = -(-S_max // page_size)
-    (table, write_slot, aborts), bt = PT.alloc_step_incremental(
+    (table, write_slot, aborts), bt = _pt(cfg).alloc_step_incremental(
         state["table"], state["seq_ids"], positions, state["block_table"],
         page_size=page_size, active=active)
     if fused:

@@ -29,10 +29,20 @@ on admission (``rebuild_block_table``), after a Section 4.3 rebuild, and in
 the CI-only verification mode (``verify_block_table``).  Eviction must
 invalidate the evicted lanes' rows (``invalidate_block_rows``) or a
 re-admitted slot could read a reclaimed page.
+
+Probe strategies: the ``PageTable`` facade binds one ``core/
+probe_strategies`` strategy (``linear`` / ``robinhood`` / ``hopscotch``)
+at construction and threads it through every operation — callers hold one
+facade object instead of plumbing a keyword through every call site.  The
+historical module-level functions remain as thin aliases bound to the
+default linear facade; they are DEPRECATED in favour of the facade and kept
+for one PR for external callers.
 """
 from __future__ import annotations
 
 import contextlib
+import functools
+import logging
 from typing import Iterator, NamedTuple, Optional, Tuple
 
 import jax
@@ -40,6 +50,9 @@ import jax.numpy as jnp
 
 from repro.core import batched as BT
 from repro.core import encoding as E
+from repro.core.probe_strategies import get_strategy
+
+logger = logging.getLogger(__name__)
 
 MAX_LOGICAL_PAGES = 2048  # 2^11 -> 500k tokens at page_size 256
 
@@ -92,10 +105,6 @@ def page_key(seq_ids, logical_pages):
             + jnp.asarray(logical_pages, jnp.uint32))
 
 
-def create_table(n_pages: int, seed: int = 0) -> BT.HashTable:
-    return BT.create(n_pages, seed=seed)
-
-
 class AllocStep(NamedTuple):
     """Result of one per-step allocation round.
 
@@ -112,197 +121,10 @@ class AllocStep(NamedTuple):
     aborted: jnp.ndarray      # bool[B]
 
 
-def alloc_step(table: BT.HashTable, seq_ids, positions, *,
-               page_size: int, active=None) -> AllocStep:
-    """Per decode step: allocate the page for each sequence's current
-    position when it crosses a page boundary.
-
-    ``active`` bool[B] (default all-True) masks lanes that are live: inactive
-    lanes neither allocate (the phantom-page leak — a finished/padding lane
-    would otherwise claim a real page every ``page_size`` steps until
-    eviction) nor receive a ``write_slot``."""
-    act = (jnp.ones(positions.shape, bool) if active is None
-           else jnp.asarray(active, bool))
-    page_idx = positions // page_size
-    need_new = ((positions % page_size) == 0) & act
-    keys = page_key(seq_ids, page_idx)
-    table, ret = BT.insert_batch(table, keys, active=need_new)
-    aborted = need_new & (ret == 2)
-    found, slots = BT.find_batch(table, keys)
-    _note_probes(jnp.sum(need_new) + positions.shape[0])
-    # a miss means the allocator aborted (pool exhausted) — surface -1
-    return AllocStep(table, jnp.where(found & act, slots, -1), aborted)
-
-
-def alloc_step_incremental(table: BT.HashTable, seq_ids, positions,
-                           block_table, *, page_size: int, active=None
-                           ) -> Tuple[AllocStep, jnp.ndarray]:
-    """``alloc_step`` with the incremental block-table cache: only the
-    page-boundary crossings probe the table; every other lane's
-    ``write_slot`` is served from ``block_table`` (int32[B, max_pages],
-    -1 = absent).  Returns (AllocStep, block_table').
-
-    Per-token probe work drops from O(B) to O(crossings); the crossing
-    scatter keeps the cache equal to the authoritative wait-free lookup
-    (``verify_block_table``).  On ABORT the crossing entry is written as -1
-    — the cache must never retain a stale slot for a page the allocator
-    refused (a re-admitted lane's row could otherwise point at a reclaimed
-    physical page)."""
-    B = positions.shape[0]
-    act = (jnp.ones(positions.shape, bool) if active is None
-           else jnp.asarray(active, bool))
-    page_idx = (positions // page_size).astype(jnp.int32)
-    need_new = ((positions % page_size) == 0) & act
-    keys = page_key(seq_ids, page_idx)
-    table, ret = BT.insert_batch(table, keys, active=need_new)
-    aborted = need_new & (ret == 2)
-    found, slots = BT.find_batch(table, keys, active=need_new)
-    _note_probes(2 * jnp.sum(need_new))
-    fresh_slot = jnp.where(found & need_new, slots, -1)
-
-    max_pages = block_table.shape[1]
-    rows = jnp.arange(B, dtype=jnp.int32)
-    cached = block_table[rows, jnp.clip(page_idx, 0, max_pages - 1)]
-    write_slot = jnp.where(need_new, fresh_slot,
-                           jnp.where(act, cached, -1))
-    block_table = block_table.at[
-        rows, jnp.where(need_new, page_idx, max_pages)].set(
-        fresh_slot, mode="drop")
-    return AllocStep(table, write_slot, aborted), block_table
-
-
-def block_table_slots(block_table, positions, *,
-                      page_size: int) -> jnp.ndarray:
-    """The per-step block-table read, cache flavoured: same [B, max_pages]
-    view as ``lookup_pages`` (-1 where absent/not-yet-needed) with ZERO
-    probes — pure elementwise masking of the cached rows."""
-    max_pages = block_table.shape[1]
-    logical = jnp.arange(max_pages, dtype=jnp.int32)
-    live = logical[None, :] <= (positions[:, None] // page_size)
-    return jnp.where(live & (block_table >= 0), block_table, -1)
-
-
-def rebuild_block_table(table: BT.HashTable, seq_ids,
-                        max_pages: int, *,
-                        use_kernel: bool = False) -> jnp.ndarray:
-    """(Re)build block-table rows from the authoritative wait-free lookup —
-    used on admission (a prefilled sequence brings pages with it), after a
-    Section 4.3 ``rehash`` (every slot moved), and by the verification mode.
-    Unlike ``lookup_pages`` this caches every present page regardless of the
-    current position — liveness is applied at read time by
-    ``block_table_slots``.
-
-    ``use_kernel=True`` serves the bulk lookup through the Pallas
-    software-pipelined probe kernel (``kernels/probe``; unresolved tail
-    falls back to the same ``BT.find_batch`` oracle in-graph) — bitwise
-    the same rows, one VMEM-tiled sweep instead of B·max_pages gathers."""
-    B = seq_ids.shape[0]
-    logical = jnp.arange(max_pages, dtype=jnp.uint32)
-    keys = page_key(seq_ids[:, None], logical[None, :]).reshape(-1)
-    if use_kernel:
-        from repro.kernels.probe import ops as PK
-        found, slots = PK.probe_lookup(
-            table, keys, interpret=jax.default_backend() != "tpu")
-    else:
-        found, slots = BT.find_batch(table, keys)
-    _note_probes(B * max_pages)
-    return jnp.where(found, slots, -1).reshape(B, max_pages)
-
-
-def invalidate_block_rows(block_table, mask) -> jnp.ndarray:
-    """Evict lanes from the cache: rows where ``mask`` is True become all
-    -1.  MUST be called when a lane's sequence is evicted/freed — the slot's
-    next occupant would otherwise read the reclaimed physical pages."""
-    return jnp.where(jnp.asarray(mask, bool)[:, None],
-                     jnp.int32(-1), block_table)
-
-
-def verify_block_table(table: BT.HashTable, seq_ids, positions, block_table,
-                       *, page_size: int) -> jnp.ndarray:
-    """CI-only verification mode: mismatch count between the incremental
-    cache and the authoritative wait-free lookup (0 = cache coherent)."""
-    max_pages = block_table.shape[1]
-    ref = lookup_pages(table, seq_ids, positions, page_size=page_size,
-                       max_pages=max_pages)
-    got = block_table_slots(block_table, positions, page_size=page_size)
-    return jnp.sum(got != ref)
-
-
-def rehash(table: BT.HashTable, n_pages: int, seed: Optional[int] = None
-           ) -> Tuple[BT.HashTable, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Section 4.3 rebuild, page-table flavoured: re-insert every live key
-    into a fresh table of ``n_pages`` cells (a new seed by default).  Because
-    the cell index IS the physical page, the caller must move the KV pages
-    along with their keys: returns (table', old_slot[m], new_slot[m],
-    live[m]) — the page permutation (padded entries have live=False)."""
-    keys, n_live = BT.live_keys(table)
-    live = jnp.arange(keys.shape[0]) < n_live
-    fresh = BT.create(n_pages,
-                      seed=(int(table.seed) + 1 if seed is None else seed))
-    fresh, _ = BT.insert_batch(fresh, keys, active=live)
-    _, old_slots = BT.find_batch(table, keys, live)
-    _, new_slots = BT.find_batch(fresh, keys, live)
-    return fresh, old_slots, new_slots, live
-
-
-def lookup_pages(table: BT.HashTable, seq_ids, positions, *,
-                 page_size: int, max_pages: int) -> jnp.ndarray:
-    """Wait-free block-table read: physical slot of every logical page of
-    every sequence (-1 where absent/not-yet-needed).  [B, max_pages]."""
-    B = seq_ids.shape[0]
-    logical = jnp.arange(max_pages, dtype=jnp.uint32)
-    keys = page_key(seq_ids[:, None], logical[None, :]).reshape(-1)
-    found, slots = BT.find_batch(table, keys)
-    _note_probes(B * max_pages)
-    slots = slots.reshape(B, max_pages)
-    found = found.reshape(B, max_pages)
-    live = logical[None, :] <= (positions[:, None] // page_size)
-    return jnp.where(found & live, slots, -1)
-
-
-def free_sequences(table: BT.HashTable, seq_ids, positions, *,
-                   page_size: int, max_pages: int,
-                   active=None) -> BT.HashTable:
-    """Evict sequences: delete all their page keys -> tombstones -> slots
-    immediately reusable by subsequent alloc_steps (no rebuild)."""
-    B = seq_ids.shape[0]
-    logical = jnp.arange(max_pages, dtype=jnp.uint32)
-    keys = page_key(seq_ids[:, None], logical[None, :]).reshape(-1)
-    act = jnp.broadcast_to(
-        (logical[None, :] <= positions[:, None] // page_size) &
-        (jnp.ones((B, 1), bool) if active is None
-         else jnp.asarray(active, bool)[:, None]),
-        (B, max_pages)).reshape(-1)
-    table, _ = BT.delete_batch(table, keys, active=act)
-    _note_probes(jnp.sum(act))
-    return table
-
-
-def prefill_alloc(table: BT.HashTable, seq_ids, lengths, *,
-                  page_size: int, max_pages: int
-                  ) -> Tuple[BT.HashTable, jnp.ndarray]:
-    """Allocate all pages for freshly prefilling sequences.  Returns
-    (table', slots [B, max_pages])."""
-    B = seq_ids.shape[0]
-    logical = jnp.arange(max_pages, dtype=jnp.uint32)
-    keys = page_key(seq_ids[:, None], logical[None, :]).reshape(-1)
-    need = (logical[None, :] * page_size < lengths[:, None]).reshape(-1)
-    table, _ = BT.insert_batch(table, keys, active=need)
-    found, slots = BT.find_batch(table, keys)
-    slots = jnp.where(found & need, slots, -1)
-    return table, slots.reshape(B, max_pages)
-
-
 class PageTableStats(NamedTuple):
     live_pages: jnp.ndarray
     tombstones: jnp.ndarray
     occupancy: jnp.ndarray
-
-
-def stats(table: BT.HashTable) -> PageTableStats:
-    return PageTableStats(live_pages=table.num_keys,
-                          tombstones=table.num_tombs,
-                          occupancy=BT.occupancy(table))
 
 
 class Headroom(NamedTuple):
@@ -310,25 +132,311 @@ class Headroom(NamedTuple):
     the admission controller's input).  With tombstone reuse (Prop. 2 as
     the allocator) a TOMBSTONE cell is immediately re-claimable, so the
     capacity that matters for admission is ``free_cells = n_pages -
-    live_pages``: the allocator ABORTs only when every cell holds a live
-    key.  ``occupancy`` keeps the paper's definition (non-EMPTY fraction,
-    what forces rebuilds in NO-reuse designs) for comparison."""
+    live_pages``: linear/robinhood ABORT only when every cell holds a live
+    key.  Under hopscotch there are never tombstones — ``free_cells``
+    counts EMPTY cells exactly — but displacement can fail before the pool
+    is full, so ``slack`` carries the strategy's extra headroom requirement
+    (``ProbeStrategy.forecast_slack``) for the forecaster's no-ABORT gate:
+    admit only while ``demand + safety + slack <= free_cells``.
+    ``occupancy`` keeps the paper's definition (non-EMPTY fraction, what
+    forces rebuilds in NO-reuse designs) for comparison."""
     n_pages: int
     live_pages: int
     tombstones: int
     free_cells: int        # n_pages - live_pages (tombstones are reusable)
     live_fraction: float   # live_pages / n_pages — the abort-relevant load
     occupancy: float       # (live + tombstones) / n_pages (paper's metric)
+    strategy: str = "linear"
+    slack: int = 0         # strategy's forecast_slack(n_pages)
 
 
-def headroom(table: BT.HashTable) -> Headroom:
-    """Synchronous (host) headroom read.  One device sync for the two
-    counters — cheap next to the once-per-K-tokens megastep sync, and the
-    proactive scheduler needs concrete numbers to decide evict/grow."""
-    m = BT.size(table)
-    live = int(table.num_keys)
-    tombs = int(table.num_tombs)
-    return Headroom(n_pages=m, live_pages=live, tombstones=tombs,
-                    free_cells=m - live,
-                    live_fraction=live / max(m, 1),
-                    occupancy=(live + tombs) / max(m, 1))
+class PageTable:
+    """Strategy-bound facade over the allocator.  Stateless apart from the
+    static strategy string — table state stays a functional pytree passed
+    in and returned, so one facade instance serves any number of pools and
+    jit caches one program per strategy."""
+
+    def __init__(self, strategy: str = "linear"):
+        self._impl = get_strategy(strategy)  # validates the name eagerly
+        self.strategy = strategy
+        self._kernel_fallback_logged = False
+
+    # -- construction / maintenance ------------------------------------
+
+    def create_table(self, n_pages: int, seed: int = 0) -> BT.HashTable:
+        return BT.create(n_pages, seed=seed, strategy=self.strategy)
+
+    def rehash(self, table: BT.HashTable, n_pages: int,
+               seed: Optional[int] = None
+               ) -> Tuple[BT.HashTable, jnp.ndarray, jnp.ndarray,
+                          jnp.ndarray]:
+        """Section 4.3 rebuild, page-table flavoured: re-insert every live
+        key into a fresh table of ``n_pages`` cells (a new seed by
+        default).  Because the cell index IS the physical page, the caller
+        must move the KV pages along with their keys: returns (table',
+        old_slot[m], new_slot[m], live[m]) — the page permutation (padded
+        entries have live=False)."""
+        keys, n_live = BT.live_keys(table)
+        live = jnp.arange(keys.shape[0]) < n_live
+        fresh = BT.create(n_pages,
+                          seed=(int(table.seed) + 1 if seed is None
+                                else seed),
+                          strategy=self.strategy)
+        fresh, _ = BT.insert_batch(fresh, keys, active=live,
+                                   strategy=self.strategy)
+        _, old_slots = BT.find_batch(table, keys, live,
+                                     strategy=self.strategy)
+        _, new_slots = BT.find_batch(fresh, keys, live,
+                                     strategy=self.strategy)
+        return fresh, old_slots, new_slots, live
+
+    # -- allocation -----------------------------------------------------
+
+    def alloc_step(self, table: BT.HashTable, seq_ids, positions, *,
+                   page_size: int, active=None) -> AllocStep:
+        """Per decode step: allocate the page for each sequence's current
+        position when it crosses a page boundary.
+
+        ``active`` bool[B] (default all-True) masks lanes that are live:
+        inactive lanes neither allocate (the phantom-page leak — a
+        finished/padding lane would otherwise claim a real page every
+        ``page_size`` steps until eviction) nor receive a
+        ``write_slot``."""
+        act = (jnp.ones(positions.shape, bool) if active is None
+               else jnp.asarray(active, bool))
+        page_idx = positions // page_size
+        need_new = ((positions % page_size) == 0) & act
+        keys = page_key(seq_ids, page_idx)
+        table, ret = BT.insert_batch(table, keys, active=need_new,
+                                     strategy=self.strategy)
+        aborted = need_new & (ret == 2)
+        found, slots = BT.find_batch(table, keys, strategy=self.strategy)
+        _note_probes(jnp.sum(need_new) + positions.shape[0])
+        # a miss means the allocator aborted (pool exhausted) — surface -1
+        return AllocStep(table, jnp.where(found & act, slots, -1), aborted)
+
+    def alloc_step_incremental(self, table: BT.HashTable, seq_ids,
+                               positions, block_table, *, page_size: int,
+                               active=None) -> Tuple[AllocStep, jnp.ndarray]:
+        """``alloc_step`` with the incremental block-table cache: only the
+        page-boundary crossings probe the table; every other lane's
+        ``write_slot`` is served from ``block_table`` (int32[B, max_pages],
+        -1 = absent).  Returns (AllocStep, block_table').
+
+        Per-token probe work drops from O(B) to O(crossings); the crossing
+        scatter keeps the cache equal to the authoritative wait-free lookup
+        (``verify_block_table``).  On ABORT the crossing entry is written
+        as -1 — the cache must never retain a stale slot for a page the
+        allocator refused (a re-admitted lane's row could otherwise point
+        at a reclaimed physical page)."""
+        B = positions.shape[0]
+        act = (jnp.ones(positions.shape, bool) if active is None
+               else jnp.asarray(active, bool))
+        page_idx = (positions // page_size).astype(jnp.int32)
+        need_new = ((positions % page_size) == 0) & act
+        keys = page_key(seq_ids, page_idx)
+        table, ret = BT.insert_batch(table, keys, active=need_new,
+                                     strategy=self.strategy)
+        aborted = need_new & (ret == 2)
+        found, slots = BT.find_batch(table, keys, active=need_new,
+                                     strategy=self.strategy)
+        _note_probes(2 * jnp.sum(need_new))
+        fresh_slot = jnp.where(found & need_new, slots, -1)
+
+        max_pages = block_table.shape[1]
+        rows = jnp.arange(B, dtype=jnp.int32)
+        cached = block_table[rows, jnp.clip(page_idx, 0, max_pages - 1)]
+        write_slot = jnp.where(need_new, fresh_slot,
+                               jnp.where(act, cached, -1))
+        block_table = block_table.at[
+            rows, jnp.where(need_new, page_idx, max_pages)].set(
+            fresh_slot, mode="drop")
+        return AllocStep(table, write_slot, aborted), block_table
+
+    def prefill_alloc(self, table: BT.HashTable, seq_ids, lengths, *,
+                      page_size: int, max_pages: int
+                      ) -> Tuple[BT.HashTable, jnp.ndarray]:
+        """Allocate all pages for freshly prefilling sequences.  Returns
+        (table', slots [B, max_pages])."""
+        B = seq_ids.shape[0]
+        logical = jnp.arange(max_pages, dtype=jnp.uint32)
+        keys = page_key(seq_ids[:, None], logical[None, :]).reshape(-1)
+        need = (logical[None, :] * page_size < lengths[:, None]).reshape(-1)
+        table, _ = BT.insert_batch(table, keys, active=need,
+                                   strategy=self.strategy)
+        found, slots = BT.find_batch(table, keys, strategy=self.strategy)
+        slots = jnp.where(found & need, slots, -1)
+        return table, slots.reshape(B, max_pages)
+
+    # -- eviction -------------------------------------------------------
+
+    def free_sequences(self, table: BT.HashTable, seq_ids, positions, *,
+                       page_size: int, max_pages: int,
+                       active=None) -> BT.HashTable:
+        """Evict sequences: delete all their page keys -> slots immediately
+        reusable by subsequent alloc_steps (no rebuild).  Linear/robinhood
+        leave tombstones (reused, Prop. 2); hopscotch reclaims the cells to
+        EMPTY outright."""
+        B = seq_ids.shape[0]
+        logical = jnp.arange(max_pages, dtype=jnp.uint32)
+        keys = page_key(seq_ids[:, None], logical[None, :]).reshape(-1)
+        act = jnp.broadcast_to(
+            (logical[None, :] <= positions[:, None] // page_size) &
+            (jnp.ones((B, 1), bool) if active is None
+             else jnp.asarray(active, bool)[:, None]),
+            (B, max_pages)).reshape(-1)
+        table, _ = BT.delete_batch(table, keys, active=act,
+                                   strategy=self.strategy)
+        _note_probes(jnp.sum(act))
+        return table
+
+    # -- reads ----------------------------------------------------------
+
+    def lookup_pages(self, table: BT.HashTable, seq_ids, positions, *,
+                     page_size: int, max_pages: int) -> jnp.ndarray:
+        """Wait-free block-table read: physical slot of every logical page
+        of every sequence (-1 where absent/not-yet-needed).
+        [B, max_pages]."""
+        B = seq_ids.shape[0]
+        logical = jnp.arange(max_pages, dtype=jnp.uint32)
+        keys = page_key(seq_ids[:, None], logical[None, :]).reshape(-1)
+        found, slots = BT.find_batch(table, keys, strategy=self.strategy)
+        _note_probes(B * max_pages)
+        slots = slots.reshape(B, max_pages)
+        found = found.reshape(B, max_pages)
+        live = logical[None, :] <= (positions[:, None] // page_size)
+        return jnp.where(found & live, slots, -1)
+
+    def rebuild_block_table(self, table: BT.HashTable, seq_ids,
+                            max_pages: int, *,
+                            use_kernel: bool = False) -> jnp.ndarray:
+        """(Re)build block-table rows from the authoritative wait-free
+        lookup — used on admission (a prefilled sequence brings pages with
+        it), after a Section 4.3 ``rehash`` (every slot moved), and by the
+        verification mode.  Unlike ``lookup_pages`` this caches every
+        present page regardless of the current position — liveness is
+        applied at read time by ``block_table_slots``.
+
+        ``use_kernel=True`` serves the bulk lookup through the Pallas
+        software-pipelined probe kernel (``kernels/probe``; unresolved tail
+        falls back to the same ``BT.find_batch`` oracle in-graph) — bitwise
+        the same rows, one VMEM-tiled sweep instead of B·max_pages gathers.
+        The kernel assumes the linear probe order: for other strategies the
+        request falls back to the jnp oracle, LOGGED (and surfaced by
+        ``engine.fallback_report`` / the dryrun ``probe_strategy`` cell
+        field — never silent)."""
+        B = seq_ids.shape[0]
+        logical = jnp.arange(max_pages, dtype=jnp.uint32)
+        keys = page_key(seq_ids[:, None], logical[None, :]).reshape(-1)
+        if use_kernel and not self._impl.kernel_supported:
+            if not self._kernel_fallback_logged:
+                logger.warning(
+                    "probe kernel fallback: strategy %r is not supported "
+                    "by the Pallas probe kernel (linear probe order); "
+                    "serving rebuild_block_table from the jnp oracle",
+                    self.strategy)
+                self._kernel_fallback_logged = True
+            use_kernel = False
+        if use_kernel:
+            from repro.kernels.probe import ops as PK
+            found, slots = PK.probe_lookup(
+                table, keys, interpret=jax.default_backend() != "tpu",
+                strategy=self.strategy)
+        else:
+            found, slots = BT.find_batch(table, keys,
+                                         strategy=self.strategy)
+        _note_probes(B * max_pages)
+        return jnp.where(found, slots, -1).reshape(B, max_pages)
+
+    @staticmethod
+    def block_table_slots(block_table, positions, *,
+                          page_size: int) -> jnp.ndarray:
+        """The per-step block-table read, cache flavoured: same
+        [B, max_pages] view as ``lookup_pages`` (-1 where absent/not-yet-
+        needed) with ZERO probes — pure elementwise masking of the cached
+        rows."""
+        max_pages = block_table.shape[1]
+        logical = jnp.arange(max_pages, dtype=jnp.int32)
+        live = logical[None, :] <= (positions[:, None] // page_size)
+        return jnp.where(live & (block_table >= 0), block_table, -1)
+
+    @staticmethod
+    def invalidate_block_rows(block_table, mask) -> jnp.ndarray:
+        """Evict lanes from the cache: rows where ``mask`` is True become
+        all -1.  MUST be called when a lane's sequence is evicted/freed —
+        the slot's next occupant would otherwise read the reclaimed
+        physical pages."""
+        return jnp.where(jnp.asarray(mask, bool)[:, None],
+                         jnp.int32(-1), block_table)
+
+    def verify_block_table(self, table: BT.HashTable, seq_ids, positions,
+                           block_table, *, page_size: int) -> jnp.ndarray:
+        """CI-only verification mode: mismatch count between the
+        incremental cache and the authoritative wait-free lookup (0 = cache
+        coherent)."""
+        max_pages = block_table.shape[1]
+        ref = self.lookup_pages(table, seq_ids, positions,
+                                page_size=page_size, max_pages=max_pages)
+        got = self.block_table_slots(block_table, positions,
+                                     page_size=page_size)
+        return jnp.sum(got != ref)
+
+    # -- accounting -----------------------------------------------------
+
+    @staticmethod
+    def stats(table: BT.HashTable) -> PageTableStats:
+        return PageTableStats(live_pages=table.num_keys,
+                              tombstones=table.num_tombs,
+                              occupancy=BT.occupancy(table))
+
+    def forecast_slack(self, n_pages: int) -> int:
+        """Extra free cells the forecaster must hold for this strategy's
+        no-ABORT guarantee (0 for linear/robinhood — Prop. 2 is exact)."""
+        return self._impl.forecast_slack(n_pages)
+
+    def headroom(self, table: BT.HashTable) -> Headroom:
+        """Synchronous (host) headroom read.  One device sync for the two
+        counters — cheap next to the once-per-K-tokens megastep sync, and
+        the proactive scheduler needs concrete numbers to decide
+        evict/grow."""
+        m = BT.size(table)
+        live = int(table.num_keys)
+        tombs = int(table.num_tombs)
+        return Headroom(n_pages=m, live_pages=live, tombstones=tombs,
+                        free_cells=m - live,
+                        live_fraction=live / max(m, 1),
+                        occupancy=(live + tombs) / max(m, 1),
+                        strategy=self.strategy,
+                        slack=self.forecast_slack(m))
+
+
+@functools.lru_cache(maxsize=None)
+def for_strategy(strategy: str = "linear") -> PageTable:
+    """The shared per-strategy facade: one instance per strategy string, so
+    jit sees stable bound methods and log-once fallback state persists
+    across call sites (engine, batcher, benchmarks)."""
+    return PageTable(strategy)
+
+
+# ---------------------------------------------------------------------------
+# DEPRECATED module-level aliases (kept for one PR).
+#
+# Historical call sites used free functions with the linear strategy baked
+# in.  They now delegate to the shared linear facade; new code should hold
+# a ``PageTable(strategy)`` instance (see ``for_strategy``) instead.
+
+_LINEAR = for_strategy("linear")
+
+create_table = _LINEAR.create_table
+alloc_step = _LINEAR.alloc_step
+alloc_step_incremental = _LINEAR.alloc_step_incremental
+prefill_alloc = _LINEAR.prefill_alloc
+free_sequences = _LINEAR.free_sequences
+lookup_pages = _LINEAR.lookup_pages
+rebuild_block_table = _LINEAR.rebuild_block_table
+block_table_slots = _LINEAR.block_table_slots
+invalidate_block_rows = _LINEAR.invalidate_block_rows
+verify_block_table = _LINEAR.verify_block_table
+rehash = _LINEAR.rehash
+stats = _LINEAR.stats
+headroom = _LINEAR.headroom

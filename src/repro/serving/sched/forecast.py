@@ -22,6 +22,29 @@ regime by construction:
 ``free_cells`` counts tombstones as free — tombstone reuse (Prop. 2 as the
 allocator) means a freed slot is immediately re-claimable and an ABORT can
 only happen when every cell holds a *live* key.
+
+The no-ABORT proof per probe strategy (``core/probe_strategies.py``):
+
+* **linear** — Prop. 2 verbatim: an insert ABORTs iff every cell holds a
+  live key, so ``demand <= free_cells`` (free = empty + tombstones) is
+  exact.  ``strategy_slack = 0``.
+* **robinhood** — identical claim reachability: displacement only reorders
+  WHICH lane wins a cell, never whether a free cell is claimable (the
+  probe sequence and the available-cell predicate are unchanged), so
+  Prop. 2 carries over unchanged.  ``strategy_slack = 0``.
+* **hopscotch** — ``free_cells`` is exact (no tombstones: deletes free the
+  cell immediately), but an insert needs a free cell *within H of its
+  home* and displacement can fail to create one below full load.  The
+  strategy therefore reports ``forecast_slack = H`` (0 when the pool fits
+  inside one neighborhood, where near-claim sees every free cell and the
+  bound is again exact): the controller must keep
+  ``demand + safety + slack <= free_cells``.  The slack makes the bound
+  conservative, not exact — the reactive rebuild path stays live as the
+  backstop for the (rare) displacement-stuck ABORT inside the slack.
+
+The slack is threaded as data, not strategy names: the engine's
+``Headroom.slack`` (filled by ``page_table.PageTable.forecast_slack``)
+reaches ``Forecast.strategy_slack`` via ``Scheduler.plan_round``.
 """
 from __future__ import annotations
 
@@ -57,10 +80,12 @@ class Forecast:
     admit_rate_ewma: float       # requests / step
     growth_slope_ewma: float     # net live pages / step (churn included)
     est_steps_to_exhaustion: float
+    strategy_slack: int = 0      # probe-strategy headroom (see module doc)
 
     @property
     def margin(self) -> int:
-        return self.free_cells - self.demand_pages - self.safety_pages
+        return (self.free_cells - self.demand_pages - self.safety_pages
+                - self.strategy_slack)
 
     @property
     def exhausted(self) -> bool:
@@ -114,7 +139,8 @@ class OccupancyForecaster:
         return total
 
     def forecast(self, positions: Sequence[int], stops: Sequence[int],
-                 free_cells: int, horizon_steps: int) -> Forecast:
+                 free_cells: int, horizon_steps: int,
+                 strategy_slack: int = 0) -> Forecast:
         d = self.demand(positions, stops, horizon_steps)
         # trend extrapolation: NET live-page slope (eviction churn cancels
         # out, so steady-state churn extrapolates to "never") plus the
@@ -122,12 +148,14 @@ class OccupancyForecaster:
         # immediately).  Consumed by the scheduler's admission gate: an
         # est_steps_to_exhaustion inside the lookahead defers admissions
         # earlier than the exact-demand bound alone would.
+        slack = int(strategy_slack)
         rate = max(self.growth_slope, 0.0) + max(self.admit_rate, 0.0)
         est = (float("inf") if rate <= 0.0
-               else max(free_cells - self.safety_pages, 0) / rate)
+               else max(free_cells - self.safety_pages - slack, 0) / rate)
         return Forecast(horizon_steps=int(horizon_steps), demand_pages=d,
                         free_cells=int(free_cells),
                         safety_pages=self.safety_pages,
                         admit_rate_ewma=self.admit_rate,
                         growth_slope_ewma=self.growth_slope,
-                        est_steps_to_exhaustion=est)
+                        est_steps_to_exhaustion=est,
+                        strategy_slack=slack)

@@ -20,7 +20,9 @@ and the megastep dispatch.  One round = one K-token megastep:
    ``proactive=False`` admission is greedy (the reactive baseline).
 3. **Headroom control** (proactive only) — the hard invariant: exact page
    demand of the occupied lanes over the NEXT megastep (during which the
-   host cannot intervene) must fit ``free_cells``.  If not, preempt
+   host cannot intervene) must fit ``free_cells`` minus the probe
+   strategy's slack (``Headroom.slack`` — 0 for linear/robinhood where the
+   bound is exact, H for hopscotch; see ``sched/forecast.py``).  If not, preempt
    policy-dominated victims (recompute preemption: pages freed, request
    re-queued with its generated tokens folded into the prompt) and/or
    grow the pool (Section 4.3 rebuild into 2x cells) — BEFORE dispatch, so
@@ -227,6 +229,11 @@ class Scheduler:
         admission is then slot-gated only)."""
         pos = np.asarray(positions, np.int64)
         K, ps = self.K, self.page_size
+        # probe-strategy headroom: hopscotch reports slack = H because an
+        # insert needs a free cell within its neighborhood (see
+        # sched/forecast.py module doc); linear/robinhood report 0 and the
+        # bound stays exact.  Threaded as data from Headroom, never by name.
+        slack = 0 if pool is None else int(getattr(pool, "slack", 0))
 
         # 1. completions -------------------------------------------------
         finish_slots: List[int] = []
@@ -257,7 +264,7 @@ class Scheduler:
                 [p for p, _ in lane_view.values()],
                 [st for _, st in lane_view.values()], horizon)
             margin = (free_cells - demand_running
-                      - self.forecaster.safety_pages)
+                      - self.forecaster.safety_pages - slack)
         prefilling = sum(
             1 for s, r in enumerate(self.lanes) if r is not None
             and pos[s] < getattr(r, "_prefill_len", 0))
@@ -268,7 +275,8 @@ class Scheduler:
         if self.proactive and free_cells is not None:
             tr = self.forecaster.forecast(
                 [p for p, _ in lane_view.values()],
-                [st for _, st in lane_view.values()], free_cells, horizon)
+                [st for _, st in lane_view.values()], free_cells, horizon,
+                strategy_slack=slack)
             trend_defer = tr.est_steps_to_exhaustion < horizon
         for r in self.policy.admit_order(self.arrived_queue()):
             if not free_slots or trend_defer:
@@ -296,7 +304,8 @@ class Scheduler:
         if free_cells is not None:
             fc = self.forecaster.forecast(
                 [p for p, _ in lane_view.values()],
-                [st for _, st in lane_view.values()], free_cells, K)
+                [st for _, st in lane_view.values()], free_cells, K,
+                strategy_slack=slack)
             if self.proactive and fc.exhausted:
                 needed = -fc.margin
                 admitted_set = {id(r) for _, r in admissions}

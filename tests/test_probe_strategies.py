@@ -1,0 +1,326 @@
+"""ProbeStrategy conformance suite (core/probe_strategies.py).
+
+Every strategy must satisfy the same observable contract (the documented
+by-batch-index serialization, exact counters, wait-free lookups); the
+``linear`` strategy is additionally pinned BITWISE to the pre-refactor
+implementation via recorded-trace digests (tests/fixtures/); ``hopscotch``
+is additionally pinned to zero tombstones under churn.
+"""
+import importlib.util
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batched as BT
+from repro.core import encoding as E
+from repro.core.linearizability import check_history
+from repro.core.probe_strategies import (H_NEIGHBORHOOD, STRATEGIES,
+                                         get_strategy)
+from repro.core.spec import (OP_DELETE, OP_INSERT, OP_LOOKUP, RET_ABORT,
+                             RET_TRUE, step_spec)
+from repro.serving import page_table as PT
+
+ALL = sorted(STRATEGIES)
+
+
+def spec_apply_grouped(state, ops, keys, m):
+    """Reference serialization: deletes < inserts < lookups, each by batch
+    index; ABORT when the table genuinely has no space.  Exact for linear /
+    robinhood at any m and for hopscotch when m <= H (the neighborhood
+    covers the table, so inserts abort only on a truly full table)."""
+    rets = [None] * len(ops)
+    for grp in (OP_DELETE, OP_INSERT, OP_LOOKUP):
+        for b, (o, k) in enumerate(zip(ops, keys)):
+            if o != grp:
+                continue
+            if o == OP_INSERT and k not in state and len(state) >= m:
+                rets[b] = RET_ABORT
+                continue
+            state, r = step_spec(state, o, k)
+            rets[b] = r
+    return state, rets
+
+
+def table_keys(ht):
+    tab = np.asarray(ht.table)
+    keys = tab >> 2
+    return set(int(k) for k in keys[keys != E.RESERVED_KEY])
+
+
+def home_of(ht, key):
+    return int(BT._hash(ht, jnp.array([key], jnp.uint32))[0])
+
+
+def check_hopscotch_meta(ht):
+    """Both directions of the bitmap invariant: bit d of meta[h] is set
+    IFF cell (h+d)%m holds a key homed at h."""
+    tab = np.asarray(ht.table)
+    meta = np.asarray(ht.meta)
+    m = tab.size
+    Hn = min(H_NEIGHBORHOOD, m)
+    for h in range(m):
+        w = int(meta[h])
+        assert w >> Hn == 0, f"meta[{h}] has bits beyond the neighborhood"
+        for d in range(Hn):
+            if (w >> d) & 1:
+                j = (h + d) % m
+                assert tab[j] != E.EMPTY, (h, d, "bit set on EMPTY cell")
+                assert home_of(ht, int(tab[j]) >> 2) == h
+    for j in range(m):
+        if tab[j] == E.EMPTY:
+            continue
+        assert tab[j] != E.TOMBSTONE, "hopscotch table holds a TOMBSTONE"
+        h = home_of(ht, int(tab[j]) >> 2)
+        d = (j - h) % m
+        assert d < Hn, (j, h, "resident outside its home neighborhood")
+        assert (int(meta[h]) >> d) & 1, (j, h, "home bit missing")
+
+
+# ---------------------------------------------------------------------------
+# Contract conformance, parameterized over every strategy.
+
+
+@pytest.mark.parametrize("strategy", ALL)
+def test_roundtrip(strategy):
+    impl = get_strategy(strategy)
+    ht = BT.create(64, seed=1, strategy=strategy)
+    keys = jnp.arange(10, dtype=jnp.uint32)
+    ht, ret = impl.insert_batch(ht, keys)
+    assert np.all(np.asarray(ret) == RET_TRUE)
+    found, slots = impl.find_batch(ht, keys)
+    assert np.all(np.asarray(found))
+    assert np.all(np.asarray(slots) >= 0)
+    miss, _ = impl.find_batch(ht, jnp.arange(100, 110, dtype=jnp.uint32))
+    assert not np.any(np.asarray(miss))
+    ht, ret = impl.delete_batch(ht, keys[:5])
+    assert np.all(np.asarray(ret) == 1)
+    present, _ = impl.find_batch(ht, keys)
+    present = np.asarray(present)
+    assert not np.any(present[:5]) and np.all(present[5:])
+    assert int(ht.num_keys) == 5
+    if impl.uses_tombstones:
+        assert int(ht.num_tombs) == 5
+    else:
+        assert int(ht.num_tombs) == 0
+        check_hopscotch_meta(ht)
+
+
+@pytest.mark.parametrize("strategy", ALL)
+def test_duplicate_inserts_one_winner(strategy):
+    impl = get_strategy(strategy)
+    ht = BT.create(16, strategy=strategy)
+    keys = jnp.array([7, 7, 7, 7], dtype=jnp.uint32)
+    ht, ret = impl.insert_batch(ht, keys)
+    ret = np.asarray(ret)
+    assert (ret == RET_TRUE).sum() == 1
+    assert int(ht.num_keys) == 1
+    assert ((np.asarray(ht.table) >> 2) == 7).sum() == 1
+
+
+@pytest.mark.parametrize("strategy", ALL)
+def test_apply_batch_matches_spec(strategy):
+    """apply_batch == the documented serialization, for every strategy.
+    m=16 <= H keeps the spec's ABORT condition exact for hopscotch too."""
+    m = 16
+    rng = np.random.default_rng(7)
+    for seed in range(3):
+        ht = BT.create(m, seed=seed, strategy=strategy)
+        state = set()
+        for _ in range(8):
+            B = int(rng.integers(1, 24))
+            ops = rng.integers(0, 3, size=B).astype(np.int32)
+            keys = rng.integers(0, 10, size=B).astype(np.uint32)
+            ht, ret = BT.apply_batch(ht, jnp.asarray(ops),
+                                     jnp.asarray(keys), strategy=strategy)
+            state, expect = spec_apply_grouped(state, list(ops),
+                                               list(keys), m)
+            assert list(np.asarray(ret)) == expect, (strategy, seed, ops,
+                                                     keys)
+        assert table_keys(ht) == state
+        assert int(ht.num_keys) == len(state)
+
+
+@pytest.mark.parametrize("strategy", ALL)
+def test_linearizable_history(strategy):
+    """Each batch application is one concurrent window (all lanes invoke at
+    t, respond at t+1); the resulting history must be linearizable per the
+    locality-theorem checker."""
+    m = 16
+    rng = np.random.default_rng(3)
+    ht = BT.create(m, seed=2, strategy=strategy)
+    rows = []
+    for t in range(10):
+        B = 8
+        ops = rng.integers(0, 3, size=B).astype(np.int32)
+        keys = rng.integers(0, 8, size=B).astype(np.uint32)
+        ht, ret = BT.apply_batch(ht, jnp.asarray(ops), jnp.asarray(keys),
+                                 strategy=strategy)
+        ret = np.asarray(ret)
+        for b in range(B):
+            rows.append((b, t, int(ops[b]), int(keys[b]), int(ret[b]),
+                         2 * t, 2 * t + 1))
+    ok, bad = check_history(rows)
+    assert ok, f"{strategy}: non-linearizable keys {bad}"
+
+
+@pytest.mark.parametrize("strategy", ALL)
+def test_counts_track_state(strategy):
+    rng = np.random.default_rng(5)
+    ht = BT.create(128, seed=2, strategy=strategy)
+    for _ in range(8):
+        ks = jnp.asarray(rng.integers(0, 60, size=32), jnp.uint32)
+        ops = jnp.asarray(rng.integers(0, 3, size=32), jnp.int32)
+        ht, _ = BT.apply_batch(ht, ops, ks, strategy=strategy)
+    assert int(ht.num_keys) == len(table_keys(ht))
+    tab = np.asarray(ht.table)
+    assert int(ht.num_tombs) == int((tab == E.TOMBSTONE).sum())
+    if strategy == "hopscotch":
+        assert int(ht.num_tombs) == 0
+        check_hopscotch_meta(ht)
+
+
+def test_hopscotch_displacement_churn():
+    """m > H forces the hop-displacement insert path: under heavy churn the
+    table stays tombstone-free, counters exact, every live key findable,
+    and the bitmap invariant holds in both directions."""
+    impl = get_strategy("hopscotch")
+    m = 64
+    assert m > H_NEIGHBORHOOD
+    rng = np.random.default_rng(11)
+    ht = BT.create(m, seed=4, strategy="hopscotch")
+    live = set()
+    for _ in range(25):
+        ks = rng.integers(0, 96, size=16).astype(np.uint32)
+        ins = rng.random(16) < 0.6
+        ins_keys = jnp.asarray(ks, jnp.uint32)
+        ht, ret = impl.insert_batch(ht, ins_keys, active=jnp.asarray(ins))
+        ret = np.asarray(ret)
+        # ret == 1 marks the unique winning lane per key per batch
+        for b in range(16):
+            if ins[b] and ret[b] == 1:
+                live.add(int(ks[b]))
+        del_keys = rng.integers(0, 96, size=8).astype(np.uint32)
+        ht, dret = impl.delete_batch(ht, jnp.asarray(del_keys))
+        for b in range(8):
+            if int(np.asarray(dret)[b]) == 1:
+                live.discard(int(del_keys[b]))
+        assert int(ht.num_tombs) == 0
+    assert table_keys(ht) == live
+    assert int(ht.num_keys) == len(live)
+    found, _ = impl.find_batch(ht, jnp.asarray(sorted(live) or [0],
+                                               jnp.uint32))
+    if live:
+        assert np.all(np.asarray(found))
+    check_hopscotch_meta(ht)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise parity: `linear` == the pre-refactor implementation.
+
+
+def _load_parity_tool():
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "tools",
+                        "record_probe_parity.py")
+    spec = importlib.util.spec_from_file_location("record_probe_parity",
+                                                  os.path.abspath(path))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_linear_bitwise_parity_recorded_trace():
+    """Replaying the recorded op trace must reproduce the digests captured
+    BEFORE the ProbeStrategy refactor, step for step — the refactored
+    linear path is bitwise-unchanged, not just observably equivalent."""
+    tool = _load_parity_tool()
+    fixture = os.path.join(os.path.dirname(__file__), "fixtures",
+                           "probe_linear_parity.json")
+    with open(fixture) as f:
+        golden = json.load(f)
+    records = tool.replay(BT, PT, jnp)
+    assert len(records) == len(golden["records"]), "trace length changed"
+    for got, want in zip(records, golden["records"]):
+        assert got == want, f"parity break at step {want['step']}"
+
+
+# ---------------------------------------------------------------------------
+# Facade / headroom / kernel-gate surfaces.
+
+
+@pytest.mark.parametrize("strategy", ALL)
+def test_facade_alloc_free_cycle(strategy):
+    """The page-table facade serves the allocator ops uniformly per
+    strategy: alloc -> lookup -> free -> re-alloc reuses the pool."""
+    pt = PT.for_strategy(strategy)
+    B, psize, maxP = 4, 2, 4
+    table = pt.create_table(32, seed=1)
+    seq = jnp.arange(B, dtype=jnp.uint32)
+    bt = jnp.full((B, maxP), -1, jnp.int32)
+    pos = jnp.zeros((B,), jnp.int32)
+    for step in range(psize * maxP):
+        st, bt = pt.alloc_step_incremental(table, seq, pos,
+                                           bt, page_size=psize)
+        table = st.table
+        assert not np.any(np.asarray(st.aborted))
+        assert np.all(np.asarray(st.write_slot) >= 0)
+        pos = pos + 1
+    rows = pt.lookup_pages(table, seq, pos, page_size=psize,
+                           max_pages=maxP)
+    assert np.all(np.asarray(rows) >= 0)
+    assert int(pt.verify_block_table(table, seq, pos, bt,
+                                     page_size=psize)) == 0
+    table = pt.free_sequences(table, seq, pos, page_size=psize,
+                              max_pages=maxP)
+    hr = pt.headroom(table)
+    assert hr.live_pages == 0 and hr.free_cells == hr.n_pages
+    assert hr.strategy == strategy
+    if strategy == "hopscotch":
+        assert hr.tombstones == 0
+
+
+def test_headroom_slack_per_strategy():
+    assert PT.for_strategy("linear").forecast_slack(256) == 0
+    assert PT.for_strategy("robinhood").forecast_slack(256) == 0
+    hop = PT.for_strategy("hopscotch")
+    # neighborhood covers the pool: near-claim sees every EMPTY cell,
+    # the bound is exact, no slack
+    assert hop.forecast_slack(H_NEIGHBORHOOD) == 0
+    assert hop.forecast_slack(256) == H_NEIGHBORHOOD
+    table = hop.create_table(256)
+    assert hop.headroom(table).slack == H_NEIGHBORHOOD
+
+
+def test_unknown_strategy_rejected():
+    with pytest.raises(ValueError, match="unknown probe strategy"):
+        get_strategy("quadratic")
+    with pytest.raises(ValueError, match="unknown probe strategy"):
+        PT.PageTable("quadratic")
+
+
+def test_probe_kernel_guard():
+    """The Pallas probe kernel serves exactly the linear-order strategies;
+    bypassing the facade with hopscotch raises instead of returning
+    linear-scan garbage."""
+    from repro.kernels.probe import ops as PK
+    ht = BT.create(64, strategy="linear")
+    keys = jnp.arange(4, dtype=jnp.uint32)
+    # robinhood lookups are bitwise the linear scan — accepted
+    found, _ = PK.probe_lookup(ht, keys, use_kernel=False,
+                               strategy="robinhood")
+    assert not np.any(np.asarray(found))
+    with pytest.raises(ValueError, match="linear order"):
+        PK.probe_lookup(ht, keys, use_kernel=False, strategy="hopscotch")
+
+
+def test_deprecated_module_aliases_still_work():
+    """One-PR deprecation window: the old PT.* module functions remain
+    callable and serve the linear strategy."""
+    table = PT.create_table(16, seed=0)
+    seq = jnp.arange(2, dtype=jnp.uint32)
+    pos = jnp.zeros((2,), jnp.int32)
+    st = PT.alloc_step(table, seq, pos, page_size=4)
+    assert not np.any(np.asarray(st.aborted))
+    assert PT.headroom(st.table).strategy == "linear"

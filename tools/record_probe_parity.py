@@ -1,0 +1,132 @@
+"""Record the golden linear-probe parity fixture.
+
+Replays a deterministic mixed workload through the batched table and the
+page-table allocator and records a sha256 digest of every intermediate
+state and return vector.  The fixture pins the ``linear`` strategy to the
+exact pre-ProbeStrategy-refactor behaviour: ``tests/test_probe_strategies.py
+::test_linear_bitwise_parity`` replays the same workload through the
+refactored code and compares digests bit-for-bit.
+
+Regenerate (only when the linear algorithm itself is INTENTIONALLY changed):
+
+    PYTHONPATH=src python -m tools.record_probe_parity
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import numpy as np
+
+FIXTURE = os.path.join(os.path.dirname(__file__), os.pardir,
+                       "tests", "fixtures", "probe_linear_parity.json")
+
+
+def digest(*arrays) -> str:
+    d = hashlib.sha256()
+    for a in arrays:
+        a = np.asarray(a)
+        d.update(str(a.dtype).encode())
+        d.update(str(a.shape).encode())
+        d.update(a.tobytes())
+    return d.hexdigest()
+
+
+def state_digest(ht) -> str:
+    return digest(ht.table, ht.num_keys, ht.num_tombs, ht.seed)
+
+
+def replay(BT, PT, jnp):
+    """Run the workload; returns the list of step records.
+
+    Takes the modules as arguments so the parity test can inject the
+    refactored implementations while this script records the originals.
+    """
+    records = []
+
+    # --- Leg 1: mixed-op churn on the batched table -----------------------
+    rng = np.random.default_rng(0)
+    ht = BT.create(64, seed=3)
+    records.append({"leg": "create", "state": state_digest(ht)})
+    for step in range(12):
+        ops = jnp.asarray(rng.integers(0, 3, size=16), jnp.int32)
+        keys = jnp.asarray(rng.integers(0, 4096, size=16), jnp.uint32)
+        ht, ret = BT.apply_batch(ht, ops, keys)
+        records.append({"leg": "apply", "step": step,
+                        "state": state_digest(ht), "ret": digest(ret)})
+
+    # no-reuse flavour (claim_tombstones=False) on the churned table
+    keys = jnp.asarray(rng.integers(0, 4096, size=16), jnp.uint32)
+    ht_nr, ret = BT.insert_batch(ht, keys, claim_tombstones=False)
+    records.append({"leg": "insert_noreuse",
+                    "state": state_digest(ht_nr), "ret": digest(ret)})
+
+    # duplicate-heavy insert (leader/duplicate arbitration)
+    dup = jnp.asarray(np.repeat(rng.integers(0, 4096, size=4), 4), jnp.uint32)
+    ht, ret = BT.insert_batch(ht, dup)
+    records.append({"leg": "insert_dup",
+                    "state": state_digest(ht), "ret": digest(ret)})
+
+    # Section 4.3 rebuild into a larger table
+    ht_big = BT.rebuild(ht, 128)
+    records.append({"leg": "rebuild", "state": state_digest(ht_big)})
+
+    # --- Leg 2: the page-table allocator ----------------------------------
+    table = PT.create_table(32, seed=1)
+    B, max_pages, page_size = 4, 8, 2
+    seq_ids = jnp.arange(B, dtype=jnp.int32)
+    positions = jnp.zeros((B,), jnp.int32)
+    block = jnp.full((B, max_pages), -1, jnp.int32)
+    for step in range(10):
+        res, block = PT.alloc_step_incremental(
+            table, seq_ids, positions, block, page_size=page_size)
+        table = res.table
+        records.append({"leg": "alloc", "step": step,
+                        "state": state_digest(table),
+                        "ret": digest(res.write_slot, res.aborted, block)})
+        positions = positions + 1
+
+    # evict two lanes, then a plain (non-incremental) alloc_step
+    evict = jnp.asarray([False, True, True, False])
+    table = PT.free_sequences(table, seq_ids, positions,
+                              page_size=page_size, max_pages=max_pages,
+                              active=evict)
+    block = PT.invalidate_block_rows(block, evict)
+    records.append({"leg": "free", "state": state_digest(table),
+                    "ret": digest(block)})
+    res = PT.alloc_step(table, seq_ids, positions, page_size=page_size)
+    table = res.table
+    records.append({"leg": "alloc_plain", "state": state_digest(table),
+                    "ret": digest(res.write_slot, res.aborted)})
+
+    # wait-free reads + rebuilt cache must pin too
+    pages = PT.lookup_pages(table, seq_ids, positions,
+                            page_size=page_size, max_pages=max_pages)
+    rebuilt = PT.rebuild_block_table(table, seq_ids, max_pages)
+    records.append({"leg": "lookup", "ret": digest(pages, rebuilt)})
+
+    # Section 4.3 rehash (page permutation)
+    fresh, old_slots, new_slots, live = PT.rehash(table, 64)
+    records.append({"leg": "rehash", "state": state_digest(fresh),
+                    "ret": digest(old_slots, new_slots, live)})
+    return records
+
+
+def main():
+    import jax.numpy as jnp
+
+    from repro.core import batched as BT
+    from repro.serving import page_table as PT
+
+    records = replay(BT, PT, jnp)
+    out = os.path.abspath(FIXTURE)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"note": "golden linear-probe digests; see module docstring",
+                   "records": records}, f, indent=1)
+    print(f"wrote {len(records)} records -> {out}")
+
+
+if __name__ == "__main__":
+    main()
