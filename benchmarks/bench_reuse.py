@@ -16,6 +16,8 @@ from repro.core import batched as BT
 from repro.core.baselines import gao_noreuse as GN
 from repro.serving import page_table as PT
 
+LPT = PT.for_strategy("linear")  # the strategy-bound facade
+
 
 def churn(module, m: int, working: int, rounds: int, seed: int = 0):
     """Returns (per-round occupancy, #rebuilds, #aborts).  Rebuild policy
@@ -98,7 +100,7 @@ def strategy_churn(m: int = 256, working: int = 96, rounds: int = 12,
 def page_churn(n_pages: int = 512, B: int = 16, page_size: int = 4,
                rounds: int = 40, seed: int = 1):
     """Same story on the paged-KV allocator: evict/admit sequences."""
-    table = PT.create_table(n_pages)
+    table = LPT.create_table(n_pages)
     rng = np.random.default_rng(seed)
     pos = np.zeros(B, np.int32)
     seq = np.arange(B, dtype=np.int32)
@@ -107,7 +109,7 @@ def page_churn(n_pages: int = 512, B: int = 16, page_size: int = 4,
     maxP = 16
     for r in range(rounds):
         for _ in range(8):
-            table, slots, aborted = PT.alloc_step(table, jnp.asarray(seq),
+            table, slots, aborted = LPT.alloc_step(table, jnp.asarray(seq),
                                                   jnp.asarray(pos),
                                                   page_size=page_size)
             assert (np.asarray(slots) >= 0).all(), "allocator aborted"
@@ -117,7 +119,7 @@ def page_churn(n_pages: int = 512, B: int = 16, page_size: int = 4,
         victims = rng.choice(B, size=B // 2, replace=False)
         mask = np.zeros(B, bool)
         mask[victims] = True
-        table = PT.free_sequences(table, jnp.asarray(seq), jnp.asarray(pos),
+        table = LPT.free_sequences(table, jnp.asarray(seq), jnp.asarray(pos),
                                   page_size=page_size, max_pages=maxP,
                                   active=jnp.asarray(mask))
         for v in victims:
@@ -134,12 +136,12 @@ def page_exhaust_reclaim(n_pages: int = 16, B: int = 4, page_size: int = 2):
     half the sequences, and confirm the tombstoned slots are re-claimed by
     the very next alloc_step (Proposition 2 as an allocator).  Returns
     machine-independent gated counts."""
-    table = PT.create_table(n_pages)
+    table = LPT.create_table(n_pages)
     seq = jnp.arange(B, dtype=jnp.int32)
     steps_to_fill = (n_pages // B) * page_size
     aborts_seen = 0
     for pos in range(steps_to_fill + page_size):
-        table, slots, aborted = PT.alloc_step(
+        table, slots, aborted = LPT.alloc_step(
             table, seq, jnp.full((B,), pos, jnp.int32),
             page_size=page_size)
         assert (np.asarray(slots) >= -1).all()
@@ -149,12 +151,12 @@ def page_exhaust_reclaim(n_pages: int = 16, B: int = 4, page_size: int = 2):
     full_occ = float(BT.occupancy(table))
     # evict half -> tombstones -> immediate reclaim, no rebuild
     half = B // 2
-    table = PT.free_sequences(
+    table = LPT.free_sequences(
         table, seq[:half], jnp.full((half,), steps_to_fill, jnp.int32),
         page_size=page_size, max_pages=n_pages)
     tombs = int(table.num_tombs)
     fresh = jnp.arange(B, B + half, dtype=jnp.int32)
-    table, slots, aborted = PT.alloc_step(
+    table, slots, aborted = LPT.alloc_step(
         table, fresh, jnp.zeros((half,), jnp.int32), page_size=page_size)
     reclaimed = int((np.asarray(slots) >= 0).sum())
     assert not np.asarray(aborted).any()

@@ -45,28 +45,29 @@ def probes_per_token(B: int = 8, max_pages: int = 64, page_size: int = 4,
     cache — ``alloc_step_incremental`` only.  The counts are exact and
     deterministic, so both rates and their ratio are gated."""
     from repro.serving import page_table as PT
+    LPT = PT.for_strategy("linear")
     n_pages = B * max_pages
     seq = jnp.arange(B, dtype=jnp.int32)
 
     PT.probe_stats_reset()
-    table = PT.create_table(n_pages)
+    table = LPT.create_table(n_pages)
     for pos in range(tokens):
         p = jnp.full((B,), pos, jnp.int32)
-        table, _, _ = PT.alloc_step(table, seq, p, page_size=page_size)
-        PT.lookup_pages(table, seq, p, page_size=page_size,
+        table, _, _ = LPT.alloc_step(table, seq, p, page_size=page_size)
+        LPT.lookup_pages(table, seq, p, page_size=page_size,
                         max_pages=max_pages)
     full = PT.PROBE_STATS["keys_probed"] / tokens
 
     PT.probe_stats_reset()
-    table = PT.create_table(n_pages)
+    table = LPT.create_table(n_pages)
     bt = jnp.full((B, max_pages), -1, jnp.int32)
     for pos in range(tokens):
         p = jnp.full((B,), pos, jnp.int32)
-        (table, ws, ab), bt = PT.alloc_step_incremental(
+        (table, ws, ab), bt = LPT.alloc_step_incremental(
             table, seq, p, bt, page_size=page_size)
         assert not bool(jnp.any(ab)) and bool(jnp.all(ws >= 0))
     incr = PT.PROBE_STATS["keys_probed"] / tokens
-    assert int(PT.verify_block_table(table, seq,
+    assert int(LPT.verify_block_table(table, seq,
                                      jnp.full((B,), tokens - 1, jnp.int32),
                                      bt, page_size=page_size)) == 0
     PT.probe_stats_reset()
@@ -86,13 +87,14 @@ def bytes_per_token(B: int = 8, max_pages: int = 64, page_size: int = 4,
     from repro.kernels import stats as KS
     from repro.kernels.fused_decode import fused_paged_attention
     from repro.serving import page_table as PT
+    LPT = PT.for_strategy("linear")
 
     seq = jnp.arange(B, dtype=jnp.int32)
-    table = PT.create_table(B * max_pages)
+    table = LPT.create_table(B * max_pages)
     bt = jnp.full((B, max_pages), -1, jnp.int32)
     for pos in range(tokens):
         p = jnp.full((B,), pos, jnp.int32)
-        (table, ws, ab), bt = PT.alloc_step_incremental(
+        (table, ws, ab), bt = LPT.alloc_step_incremental(
             table, seq, p, bt, page_size=page_size)
         assert not bool(jnp.any(ab))
 
@@ -125,6 +127,7 @@ def strategy_page_churn(n_pages: int = 256, B: int = 8, page_size: int = 4,
     tombstones while linear/robinhood carry the churn's tombstone load."""
     from repro.core.probe_strategies import STRATEGIES
     from repro.serving import page_table as PT
+    LPT = PT.for_strategy("linear")
 
     out = {}
     for name in sorted(STRATEGIES):
@@ -267,6 +270,73 @@ def sched_storm(fast: bool) -> dict:
     }
 
 
+def sharded_routing(fast: bool) -> dict:
+    """Cross-shard routing overhead: the SAME admission storm replayed
+    through the hash-prefix-sharded page table (``serving/sharded_table`` +
+    ``sched/router``, S shards) and through a single-shard instance of the
+    identical stack (S=1 — the routing layer with routing a no-op).  Both
+    runs go through the simulated multi-host harness
+    (``tests/_multihost.SimCluster``), model replaced by the virtual clock.
+
+    Gated (deterministic virtual-clock / probe-counter replays): probes per
+    nominal decode token for each flavour and their ratio (the routing
+    overhead), zero proactive aborts on both, completed == submitted, and
+    the per-flavour round counts.  Queue-wait / TTFT percentiles (virtual
+    steps) are report-only — admission latency under sharding."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                    "tests"))
+    import _multihost as MH
+
+    from repro.serving import page_table as PT
+    from repro.serving.sched import synthetic_workload
+
+    hosts = 2 if fast else 4
+    n_req = 8 if fast else 16
+    max_len = 24
+
+    def storm(n_shards):
+        # capacity held fixed GLOBALLY so S=1 vs S shards compare the
+        # routing, not the pool size
+        wl = synthetic_workload(n_req, vocab_size=256, max_len=max_len,
+                                seed=0, prompt_len=(2, 5), max_new=(12, 18))
+        cluster = MH.SimCluster(
+            hosts=n_shards, pages_per_shard=hosts * 24 // n_shards,
+            slots_per_shard=hosts * 3 // n_shards, page_size=4,
+            max_len=max_len, megastep_k=4, fail_on_abort=True)
+        PT.probe_stats_reset()
+        s = cluster.run_storm(wl, max_rounds=400)
+        probes = PT.PROBE_STATS["keys_probed"]
+        PT.probe_stats_reset()
+        tokens = sum(min(r.total_len, max_len)
+                     for r in cluster.router.finished())
+        return s, probes / max(tokens, 1)
+
+    s_many, ppt_many = storm(hosts)
+    s_one, ppt_one = storm(1)
+    assert int(s_many["completed"]) == int(s_many["submitted"])
+    assert int(s_one["completed"]) == int(s_one["submitted"])
+    return {
+        # gated
+        "shards": hosts,
+        "probes_per_token_sharded": ppt_many,
+        "probes_per_token_single": ppt_one,
+        "routing_overhead_x": ppt_many / max(ppt_one, 1e-9),
+        "sharded_aborts": int(s_many["aborts_observed"]),
+        "single_aborts": int(s_one["aborts_observed"]),
+        "sharded_completed": int(s_many["completed"]),
+        "sharded_rounds": int(s_many["rounds"]),
+        "single_rounds": int(s_one["rounds"]),
+        "sharded_pool_grows": int(s_many["pool_grows"]),
+        # report-only admission latency (virtual-clock steps)
+        "sharded_queue_wait_p99_steps": s_many["queue_wait_p99"],
+        "single_queue_wait_p99_steps": s_one["queue_wait_p99"],
+        "sharded_ttft_p99_steps": s_many["ttft_p99"],
+        "single_ttft_p99_steps": s_one["ttft_p99"],
+    }
+
+
 def run(verbose: bool = True, fast: bool = False) -> dict:
     m = 1 << 14 if fast else 1 << 16
     B = 1 << 10 if fast else 1 << 12
@@ -301,6 +371,7 @@ def run(verbose: bool = True, fast: bool = False) -> dict:
     strat = strategy_page_churn(rounds=6 if fast else 10)
     decode = decode_tok_s(fast)
     sched = sched_storm(fast)
+    routed = sharded_routing(fast)
     if verbose:
         print(f"bench_throughput (jit CPU, m={m}, batch={B})")
         print("   load   lookup-hit   lookup-miss   mixed  [Mops/s]")
@@ -333,5 +404,13 @@ def run(verbose: bool = True, fast: bool = False) -> dict:
               f"grows={sched['sched_pool_grows']}; "
               f"ttft p50/p99={sched['ttft_p50_steps']:.0f}/"
               f"{sched['ttft_p99_steps']:.0f} steps (report-only)")
+        print(f"  sharded routing (S={routed['shards']} vs 1): "
+              f"probes/token {routed['probes_per_token_sharded']:.1f} vs "
+              f"{routed['probes_per_token_single']:.1f} "
+              f"({routed['routing_overhead_x']:.2f}x); aborts="
+              f"{routed['sharded_aborts']}; ttft p99 "
+              f"{routed['sharded_ttft_p99_steps']:.0f} vs "
+              f"{routed['single_ttft_p99_steps']:.0f} steps (report-only)")
     return {"rows": rows, "decode": {**probes, **hbm, **decode},
-            "strategies": strat, "sched": sched}
+            "strategies": strat, "sched": sched,
+            "sharded_routing": routed}

@@ -35,12 +35,18 @@ def main() -> int:
     if args.only:
         benches = {args.only: benches[args.only]}
 
+    import jax
+
     results = {}
     for name, fn in benches.items():
         print(f"\n=== {name} " + "=" * (60 - len(name)))
         t0 = time.time()
         results[name] = fn()
         print(f"[{name}] {time.time() - t0:.1f}s")
+        # each retained XLA:CPU executable holds mmap'd JIT code; a full
+        # sweep accumulates enough to exhaust vm.max_map_count and segfault
+        # the next section's compile — caches are per-section state anyway
+        jax.clear_caches()
     os.makedirs("results", exist_ok=True)
     with open("results/benchmarks.json", "w") as f:
         json.dump(results, f, indent=1, default=str)

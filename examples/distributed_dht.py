@@ -1,51 +1,70 @@
-"""Device-sharded distributed hash table (DHT): keys hash-routed to owner
-shards with the MoE-dispatch all_to_all pattern, applied locally with the
-batched lock-free-analog engine.
+"""Host-sharded distributed page table: hash-prefix routing, per-shard
+admission, lazy incremental resize and elastic host loss — the
+``serving/sharded_table`` + ``sched/router`` layer driven end-to-end
+through the simulated multi-host harness (``tests/_multihost``).
 
 Spawns itself with 8 fake CPU devices (the dry-run rule: only launch/dryrun
-gets 512).  Run: PYTHONPATH=src python examples/distributed_dht.py
+gets 512) and pins each shard's tables to its own fake device.
+Run: PYTHONPATH=src python examples/distributed_dht.py
 """
 import os
 import subprocess
 import sys
 
 BODY = """
-import jax, jax.numpy as jnp, numpy as np
-from repro.core import sharded as SHT
-from repro.core.spec import OP_DELETE, OP_INSERT, OP_LOOKUP
+import sys
+import numpy as np
+import jax
 
-mesh = jax.make_mesh((8,), ("model",))
-st, apply_fn = SHT.make_sharded_table(mesh, "model", m_global=4096,
-                                      capacity=128)
-rng = np.random.default_rng(0)
-B = 512
-keys = jnp.asarray(rng.choice(1 << 20, size=B, replace=False), jnp.uint32)
+sys.path.insert(0, "tests")
+import _multihost as MH
 
-st, ret, ovf = apply_fn(st, jnp.full((B,), OP_INSERT, jnp.int32), keys)
-print(f"   inserted {int((ret == 1).sum())}/{B} "
-      f"(overflowed routes: {int(ovf.sum())})")
+from repro.dist import table_shard as TS
+from repro.dist.fault_tolerance import elastic_table_plan
+from repro.serving.sched import synthetic_workload
 
-st, ret, _ = apply_fn(st, jnp.full((B,), OP_LOOKUP, jnp.int32), keys)
-print(f"   lookups found {int(ret.sum())}/{B}")
+# --- 1. the routing layer: hash-prefix manifest --------------------------
+HOSTS = 4
+man = TS.ShardManifest.balanced(HOSTS)
+owners = man.owner_of_seq(np.arange(1, 257, dtype=np.uint32))
+counts = np.bincount(owners, minlength=HOSTS)
+print(f"   manifest: {1 << man.prefix_bits} prefixes over {HOSTS} hosts; "
+      f"256 seqs land as {counts.tolist()} (hash-balanced)")
 
-half = jnp.asarray(np.arange(B) % 2 == 0)
-st, ret, _ = apply_fn(st, jnp.where(half, OP_DELETE, OP_LOOKUP), keys)
-st, ret, _ = apply_fn(st, jnp.full((B,), OP_LOOKUP, jnp.int32), keys)
-print(f"   after deleting half: lookups find {int(ret.sum())} "
-      f"(expect {B // 2})")
-assert int(ret.sum()) == B // 2
-shards = np.asarray(st.num_keys)
-print(f"   per-shard live keys: {shards.tolist()} (hash-balanced)")
+# --- 2. the storm: admission + lazy grow + host loss under traffic -------
+cluster = MH.SimCluster(hosts=HOSTS, pages_per_shard=32, slots_per_shard=3,
+                        page_size=4, max_len=32, megastep_k=4,
+                        fail_on_abort=True, place_on_devices=True,
+                        verbose=True)
+wl = synthetic_workload(32, vocab_size=256, max_len=32, seed=0,
+                        prompt_len=(2, 5), max_new=(20, 28))
+print(f"   storm: {len(wl)} requests over {HOSTS} hosts on "
+      f"{len(jax.devices())} fake devices (grow @r3, host loss @r6)")
+s = cluster.run_storm(wl, grow_round=3, lose_round=6)
+print(f"   drained in {int(s['rounds'])} rounds: "
+      f"completed={int(s['completed'])}/{int(s['submitted'])} "
+      f"rehomed={int(s['rehomed'])} grows={int(s['pool_grows'])} "
+      f"aborts={int(s['aborts_observed'])}")
+assert int(s["completed"]) == int(s["submitted"]), "lost requests"
+assert int(s["aborts_observed"]) == 0
+
+# --- 3. the elastic plan the loss triggered ------------------------------
+new_man, shape, names = elastic_table_plan(man, lost_shard=HOSTS - 1,
+                                           model_parallel=16)
+print(f"   elastic_table_plan: survivors={new_man.live_shards()} "
+      f"mesh={dict(zip(names, shape))}")
+assert len(new_man.live_shards()) == len(cluster.spt.live_shards())
 print("[example] distributed_dht OK")
 """
 
 if __name__ == "__main__":
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                         + " --xla_force_host_platform_device_count=8")
-    env.setdefault("PYTHONPATH", "src")
-    print("[example] 8-shard DHT over a device mesh (subprocess)")
-    out = subprocess.run([sys.executable, "-c", BODY], env=env,
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    print("[example] 4-host sharded page table on fake devices (subprocess)")
+    out = subprocess.run([sys.executable, "-c", BODY], env=env, cwd=root,
                          capture_output=True, text=True, timeout=600)
     print(out.stdout, end="")
     if out.returncode != 0:

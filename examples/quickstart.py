@@ -46,15 +46,16 @@ print(f"   re-inserted 10 new keys; occupancy still "
 print("=" * 64)
 print("3) the integration: table slots ARE physical KV pages")
 from repro.serving import page_table as PT
-table = PT.create_table(32)
+pt = PT.for_strategy("linear")
+table = pt.create_table(32)
 seqs = jnp.arange(4, dtype=jnp.int32)
 for pos in range(12):
-    table, slots, _ = PT.alloc_step(table, seqs,
+    table, slots, _ = pt.alloc_step(table, seqs,
                                     jnp.full((4,), pos, jnp.int32),
                                     page_size=4)
 print(f"   4 sequences x 12 tokens @ page_size 4 -> "
       f"{int(table.num_keys)} pages allocated")
-table = PT.free_sequences(table, seqs[:2], jnp.full((2,), 12, jnp.int32),
+table = pt.free_sequences(table, seqs[:2], jnp.full((2,), 12, jnp.int32),
                           page_size=4, max_pages=8)
 print(f"   evicted 2 sequences -> {int(table.num_tombs)} tombstoned pages "
       f"(immediately reusable, no compaction)")

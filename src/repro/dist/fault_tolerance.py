@@ -112,6 +112,28 @@ def elastic_plan(n_chips: int, model_parallel: int) -> Tuple[Tuple[int, ...],
     return ((n_chips // model_parallel, model_parallel), ("data", "model"))
 
 
+def elastic_table_plan(manifest, lost_shard: int, *,
+                       chips_per_group: int = POD_CHIPS,
+                       model_parallel: int = 16):
+    """The serving-side elastic recovery in one step: losing a host group
+    (a) picks the best surviving mesh (``elastic_plan`` — the pod axis
+    collapses when only one full pod survives) and (b) reassigns the dead
+    shard's hash-prefix ranges to the survivors
+    (``table_shard.ShardManifest.reassign`` — survivors keep their own
+    ranges, so live sequences elsewhere are undisturbed).  Returns
+    ``(new_manifest, mesh_shape, axis_names)``; re-admitting the lost
+    lanes is the scheduler router's job (``sched/router.lose_host`` runs
+    the recompute-preemption path).
+
+    The two halves must agree: the mesh's surviving host-group count and
+    ``new_manifest.live_shards()`` describe the same fleet, which is what
+    ``tests/test_dist.py`` pins."""
+    new_manifest = manifest.reassign(lost_shard)
+    survivors = len(new_manifest.live_shards())
+    shape, names = elastic_plan(survivors * chips_per_group, model_parallel)
+    return new_manifest, shape, names
+
+
 def accum_for(target_batch: int, actual: int) -> int:
     """Gradient-accumulation steps keeping effective batch >= target after
     an elastic resize shrank the per-step batch to ``actual``."""

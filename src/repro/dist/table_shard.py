@@ -1,0 +1,356 @@
+"""Hash-prefix sharding + lazy incremental resize for the page table.
+
+This is the table-protocol half of the distributed page table (the
+serving-facing routing facade lives in ``serving/sharded_table.py``):
+
+* **Prefix routing** (``ShardManifest``) — the key space is partitioned by a
+  *hash prefix of the sequence id*: ``prefix = top bits of
+  hash(seq_id)``, and a manifest maps each of the ``2^prefix_bits`` prefix
+  ranges to an owner shard (one shard per host group — the pod axis of the
+  production meshes).  Routing by *sequence* (not by page key) means every
+  page of a sequence lands on one owner shard, so admission control can be
+  gated by the owner's headroom alone and the scheduler's no-ABORT proof
+  restates per shard (see ``serving/sched/router.py``).  The manifest is
+  plain data (JSON-serializable — it rides in the sharded checkpoint) and
+  supports **reassignment**: losing a host group hands its prefix ranges to
+  the survivors round-robin (``reassign``), which is all the routing layer
+  needs for elastic recovery.
+
+* **Lazy incremental resize** (``TableShard``) — the Gao/Groote/Hesselink
+  protocol ("Lock-free dynamic hash tables with open addressing", PAPERS.md)
+  adapted to the batched/quiescent table: instead of the Section 4.3
+  stop-the-world rebuild, a grown shard holds TWO tables — ``old`` (the
+  pre-grow table, frozen for inserts) and ``table`` (the fresh, larger
+  one) — plus a **migration cursor**.  Buckets migrate out of ``old``
+
+  - *on access*: inserts and deletes first migrate the touched keys
+    (``migrate_keys``) — the paper's migrate-on-access rule;
+  - *by cursor sweep*: each serving round migrates a bounded chunk of old
+    cells (``sweep_migrate``), guaranteeing termination even for keys never
+    touched again.
+
+  Lookups stay **wait-free union reads** (new table first, then old —
+  ``shard_find``): they never write, deviating from Gao et al. (who migrate
+  on reads too) in favour of keeping the paper's wait-free read path; the
+  cursor provides the progress a read-side helper would.  Every migrated
+  entry leaves a **moved marker** behind: a TOMBSTONE in the old cell plus a
+  per-entry bit carried in the old table's ``HashTable.meta`` leaf — the
+  ProbeStrategy metadata path (PR 7); ``meta`` is empty for the
+  metadata-free strategies, so the marker bitmask rides the existing pytree
+  slot.  (Hopscotch already uses ``meta`` for neighborhood bitmaps; its
+  tombstone-free delete — the cell reverts to EMPTY — *is* the moved marker
+  there, and the bitmask is skipped.)
+
+  Migration completes when ``old.num_keys == 0``; physical pages move WITH
+  their keys, one bounded batch per round, via the ``MoveSet`` each
+  migration step returns (the caller owns the pools — cell index IS the
+  physical page, exactly as in the eager ``PageTable.rehash``).
+
+Everything here is host-driven between megasteps (eager jax on small
+batches) — the jitted decode megastep never sees a half-migrated table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched as BT
+from repro.core import encoding as E
+from repro.core import hashing as H
+
+PREFIX_SEED = 0x50D5EED   # routing hash seed — independent of probe hashes
+DEFAULT_PREFIX_BITS = 6   # 64 prefix ranges: fine-grained enough to respread
+MIGRATE_CHUNK = 32        # old cells swept per migration service round
+
+
+def seq_prefix(seq_ids, prefix_bits: int = DEFAULT_PREFIX_BITS):
+    """Hash prefix of each sequence id: top ``prefix_bits`` bits of an
+    independent hash — the routing key of the distributed table."""
+    return H.hash_keys(jnp.asarray(seq_ids, jnp.uint32),
+                       1 << prefix_bits, PREFIX_SEED)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardManifest:
+    """Prefix-range -> owner-shard map.  ``owners[p]`` is the shard owning
+    prefix ``p``; a shard with no prefixes is dead (lost / drained)."""
+    prefix_bits: int
+    owners: Tuple[int, ...]           # len == 2**prefix_bits
+
+    @staticmethod
+    def balanced(n_shards: int,
+                 prefix_bits: int = DEFAULT_PREFIX_BITS) -> "ShardManifest":
+        if n_shards < 1 or n_shards > (1 << prefix_bits):
+            raise ValueError(f"n_shards={n_shards} not in [1, 2^{prefix_bits}]")
+        owners = tuple(p % n_shards for p in range(1 << prefix_bits))
+        return ShardManifest(prefix_bits, owners)
+
+    @property
+    def n_prefixes(self) -> int:
+        return 1 << self.prefix_bits
+
+    def live_shards(self) -> Tuple[int, ...]:
+        return tuple(sorted(set(self.owners)))
+
+    def owner_of_seq(self, seq_ids) -> np.ndarray:
+        """Owner shard of each sequence id (host ints)."""
+        pref = np.asarray(seq_prefix(seq_ids, self.prefix_bits))
+        return np.asarray(self.owners, np.int32)[pref]
+
+    def reassign(self, lost_shard: int) -> "ShardManifest":
+        """Elastic recovery: hand the lost shard's prefix ranges to the
+        survivors round-robin.  Prefixes owned by survivors are untouched,
+        so in-flight sequences on surviving shards keep their owner."""
+        survivors = [s for s in self.live_shards() if s != lost_shard]
+        if not survivors:
+            raise ValueError("cannot reassign: no surviving shards")
+        owners = list(self.owners)
+        nxt = 0
+        for p, o in enumerate(owners):
+            if o == lost_shard:
+                owners[p] = survivors[nxt % len(survivors)]
+                nxt += 1
+        return ShardManifest(self.prefix_bits, tuple(owners))
+
+    # -- serialization (rides in the sharded checkpoint) -----------------
+
+    def to_json(self) -> str:
+        return json.dumps({"prefix_bits": self.prefix_bits,
+                           "owners": list(self.owners)})
+
+    @staticmethod
+    def from_json(s: str) -> "ShardManifest":
+        d = json.loads(s)
+        return ShardManifest(int(d["prefix_bits"]), tuple(d["owners"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class MoveSet:
+    """Physical page moves produced by one migration step: page data at
+    old-table cell ``old_slots[i]`` must move to new-table cell
+    ``new_slots[i]`` (local indices — the serving facade maps them to
+    global pool slots via the shard's regions)."""
+    old_slots: np.ndarray   # int32[n]
+    new_slots: np.ndarray   # int32[n]
+
+    @property
+    def n(self) -> int:
+        return int(self.old_slots.size)
+
+    @staticmethod
+    def empty() -> "MoveSet":
+        z = np.zeros((0,), np.int32)
+        return MoveSet(z, z)
+
+
+def _marker_words(m: int) -> int:
+    return (m + 31) // 32
+
+
+@dataclasses.dataclass
+class TableShard:
+    """One shard of the distributed page table.  ``old is None`` = stable;
+    otherwise a lazy resize is in flight (see module docstring)."""
+    shard_id: int
+    strategy: str
+    table: BT.HashTable                 # current (post-grow) table
+    old: Optional[BT.HashTable] = None  # migrating-from table
+    cursor: int = 0                     # next old cell the sweep visits
+    migrated: int = 0                   # entries moved so far (markers set)
+
+    # -- state ----------------------------------------------------------
+
+    @property
+    def migrating(self) -> bool:
+        return self.old is not None
+
+    def n_cells(self) -> int:
+        return BT.size(self.table)
+
+    def live_pages(self) -> int:
+        """Live keys across BOTH tables — each owns a physical page."""
+        n = int(self.table.num_keys)
+        if self.old is not None:
+            n += int(self.old.num_keys)
+        return n
+
+    def free_cells(self) -> int:
+        """Cells not spoken for in the CURRENT table.  During migration
+        every un-migrated old key will eventually claim a new-table cell,
+        so those cells are already committed: ``free = m_new - live_new -
+        live_old``.  This keeps the forecaster's ``demand + safety + slack
+        <= free_cells`` a no-ABORT proof *through* a migration — any
+        interleaving of <= free_cells fresh inserts with migrations fits,
+        because migrations consume exactly the live_old committed cells."""
+        return BT.size(self.table) - self.live_pages()
+
+    # -- construction ----------------------------------------------------
+
+    @staticmethod
+    def create(shard_id: int, m: int, seed: int = 0,
+               strategy: str = "linear") -> "TableShard":
+        return TableShard(shard_id=shard_id, strategy=strategy,
+                          table=BT.create(m, seed=seed, strategy=strategy))
+
+    # -- lazy resize ------------------------------------------------------
+
+    def begin_migration(self, new_m: int,
+                        seed: Optional[int] = None) -> "TableShard":
+        """Start the lazy Section 4.3 grow: fresh empty table of ``new_m``
+        cells becomes current; the previous table freezes as ``old`` (no
+        new inserts land there) with a moved-marker bitmask threaded onto
+        its ``meta`` leaf.  O(1) — no rehash, no page sweep; growth
+        proceeds under traffic via migrate_keys/sweep_migrate."""
+        if self.migrating:
+            raise RuntimeError(
+                f"shard {self.shard_id}: migration already in flight")
+        if new_m < self.live_pages():
+            raise ValueError(
+                f"shard {self.shard_id}: new_m={new_m} below live set "
+                f"{self.live_pages()}")
+        old = self.table
+        if old.meta.size == 0:   # metadata-free strategy: meta carries the
+            old = old._replace(  # per-entry moved markers (PR 7 path)
+                meta=jnp.zeros((_marker_words(BT.size(old)),), jnp.uint32))
+        fresh = BT.create(new_m, seed=(int(self.table.seed) + 1
+                                       if seed is None else seed),
+                          strategy=self.strategy)
+        return dataclasses.replace(self, table=fresh, old=old, cursor=0)
+
+    def _mark_moved(self, old: BT.HashTable, slots: np.ndarray
+                    ) -> BT.HashTable:
+        if old.meta.size == 0 or slots.size == 0:   # hopscotch: EMPTY is
+            return old                              # the marker already
+        # host-side accumulating OR: two slots in one word must both land
+        # (jnp .at[].set with duplicate indices keeps only one)
+        meta = np.asarray(old.meta).copy()
+        np.bitwise_or.at(meta, slots // 32,
+                         np.uint32(1) << (slots.astype(np.uint32) % 32))
+        return old._replace(meta=jnp.asarray(meta))
+
+    def _migrate_active(self, keys, act) -> Tuple["TableShard", MoveSet]:
+        """Migrate the active keys that are still in ``old``: insert into
+        the current table, tombstone + mark the old cell, report the page
+        moves.  The inner mechanic of both migration entry points."""
+        assert self.old is not None
+        keys = jnp.asarray(keys, jnp.uint32)
+        found, old_slots = BT.find_batch(self.old, keys, act,
+                                         strategy=self.strategy)
+        mig = np.asarray(found & act)
+        if not mig.any():
+            return self, MoveSet.empty()
+        mig_j = jnp.asarray(mig)
+        table, ret = BT.insert_batch(self.table, keys, active=mig_j,
+                                     strategy=self.strategy)
+        if int(np.asarray((ret == 2) & mig_j).sum()):
+            # begin_migration guarantees capacity; reaching here means the
+            # caller grew below the live set — corruption, not overflow
+            raise RuntimeError(
+                f"shard {self.shard_id}: migration insert ABORTed — "
+                f"new table smaller than the live set")
+        _, new_slots = BT.find_batch(table, keys, active=mig_j,
+                                     strategy=self.strategy)
+        old, _ = BT.delete_batch(self.old, keys, active=mig_j,
+                                 strategy=self.strategy)
+        old_np = np.asarray(old_slots)[mig]
+        old = self._mark_moved(old, old_np)
+        moves = MoveSet(old_np.astype(np.int32),
+                        np.asarray(new_slots)[mig].astype(np.int32))
+        shard = dataclasses.replace(self, table=table, old=old,
+                                    migrated=self.migrated + moves.n)
+        return shard._maybe_finish(), moves
+
+    def migrate_keys(self, keys, active=None) -> Tuple["TableShard", MoveSet]:
+        """Migrate-on-access: move the touched keys' buckets out of ``old``
+        before an insert/delete lands.  No-op when stable."""
+        if not self.migrating:
+            return self, MoveSet.empty()
+        keys = jnp.asarray(keys, jnp.uint32)
+        act = (jnp.ones(keys.shape, bool) if active is None
+               else jnp.asarray(active, bool))
+        return self._migrate_active(keys, act)
+
+    def sweep_migrate(self, chunk: int = MIGRATE_CHUNK
+                      ) -> Tuple["TableShard", MoveSet]:
+        """Cursor sweep: migrate the live keys in the next ``chunk`` old
+        cells.  Bounded work per call; termination in ceil(m_old/chunk)
+        calls regardless of access pattern."""
+        if not self.migrating:
+            return self, MoveSet.empty()
+        assert self.old is not None
+        m_old = BT.size(self.old)
+        lo = self.cursor
+        hi = min(lo + int(chunk), m_old)
+        cells = self.old.table[lo:hi]
+        is_key = E.dec_key(cells) != jnp.uint32(E.RESERVED_KEY)
+        keys = jnp.where(is_key, E.dec_key(cells), jnp.uint32(0))
+        shard, moves = self._migrate_active(keys, is_key)
+        shard = dataclasses.replace(shard, cursor=hi)
+        return shard._maybe_finish(), moves
+
+    def _maybe_finish(self) -> "TableShard":
+        if self.old is None:
+            return self
+        done_by_count = int(self.old.num_keys) == 0
+        done_by_sweep = self.cursor >= BT.size(self.old)
+        if done_by_count or done_by_sweep:
+            if not done_by_count:
+                # the sweep covered every cell, so nothing live can remain
+                raise RuntimeError(
+                    f"shard {self.shard_id}: sweep completed with "
+                    f"{int(self.old.num_keys)} keys left in old")
+            return dataclasses.replace(self, old=None, cursor=0)
+        return self
+
+    # -- operations (route through these, never at BT directly) ----------
+
+    def find(self, keys, active=None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Wait-free union read: (found, local_slot, in_old).  ``in_old``
+        marks hits whose physical page still lives at the OLD table's cell
+        (the serving facade maps those through the old region)."""
+        keys = jnp.asarray(keys, jnp.uint32)
+        found_n, slot_n = BT.find_batch(self.table, keys, active,
+                                        strategy=self.strategy)
+        if self.old is None:
+            return found_n, slot_n, jnp.zeros(found_n.shape, bool)
+        found_o, slot_o = BT.find_batch(self.old, keys, active,
+                                        strategy=self.strategy)
+        in_old = ~found_n & found_o
+        return (found_n | found_o,
+                jnp.where(found_n, slot_n, slot_o), in_old)
+
+    def insert(self, keys, active=None
+               ) -> Tuple["TableShard", jnp.ndarray, MoveSet]:
+        """Insert into the CURRENT table (migrate-on-access first, so a
+        re-inserted key can never be live in both tables).  Returns
+        (shard', ret int32[B] — 1 inserted / 0 present / 2 ABORT, moves)."""
+        keys = jnp.asarray(keys, jnp.uint32)
+        act = (jnp.ones(keys.shape, bool) if active is None
+               else jnp.asarray(active, bool))
+        shard, moves = self.migrate_keys(keys, act)
+        table, ret = BT.insert_batch(shard.table, keys, active=act,
+                                     strategy=self.strategy)
+        return dataclasses.replace(shard, table=table), ret, moves
+
+    def delete(self, keys, active=None
+               ) -> Tuple["TableShard", jnp.ndarray, MoveSet]:
+        """Delete from wherever the key lives (migrate-on-access keeps the
+        single-home invariant: after migrate, only the current table can
+        hold it)."""
+        keys = jnp.asarray(keys, jnp.uint32)
+        act = (jnp.ones(keys.shape, bool) if active is None
+               else jnp.asarray(active, bool))
+        shard, moves = self.migrate_keys(keys, act)
+        table, ret = BT.delete_batch(shard.table, keys, active=act,
+                                     strategy=self.strategy)
+        return dataclasses.replace(shard, table=table), ret, moves
+
+    def migration_progress(self) -> Tuple[int, int]:
+        """(entries migrated so far, entries still in old)."""
+        left = 0 if self.old is None else int(self.old.num_keys)
+        return self.migrated, left

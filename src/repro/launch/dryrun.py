@@ -156,9 +156,13 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
         lowered = jitted.lower(params_sds, state_sds, specs["tokens"])
 
     compiled = lowered.compile()
+    from repro.serving.sharded_table import plan_table_shards
     meta = {"arch": arch_id, "shape": shape_name,
             "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
-            "kind": shape.kind}
+            "kind": shape.kind,
+            # page-table shards this mesh serves with: one per pod-axis
+            # host group (serving/sharded_table.plan_table_shards)
+            "table_shards": plan_table_shards(mesh)}
     if shape.kind == "decode":
         # every gated fast-path fallback from ONE structure
         # (engine.fallback_report — the same reason functions the step
@@ -225,7 +229,8 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str,
                     "temp_size_in_bytes", "generated_code_size_in_bytes",
                     "alias_size_in_bytes") if hasattr(mem, k)}
         rec.update(status="ok", compile_s=round(t_compile, 1),
-                   kind=meta["kind"], memory_analysis=mem_rec,
+                   kind=meta["kind"], table_shards=meta["table_shards"],
+                   memory_analysis=mem_rec,
                    roofline=rl.to_dict())
         if "decode_tp" in meta:
             rec["decode_tp"] = meta["decode_tp"]

@@ -212,7 +212,7 @@ class ContinuousBatcher:
                 # fresh admissions start at pos 0 with no pages, so the
                 # invalidated (-1) block-table rows ARE the correct cache;
                 # an admission carrying prefilled pages would rebuild its
-                # rows from the wait-free lookup (PT.rebuild_block_table)
+                # rows from the wait-free lookup (PageTable.rebuild_block_table)
             self.state["seq_ids"] = jnp.asarray(seq_ids)
             self.state["active"] = jnp.asarray(active)
             self.state["aborted"] = jnp.asarray(aborted)

@@ -6,11 +6,11 @@ The hash-table page table (serving/page_table) is consulted ONCE per step
 (serving/paged.compact_local); every attention layer then reuses the same
 compacted page list.  The block-table read is served from the persistent
 ``state["block_table"]`` cache, scatter-updated at page-boundary crossings
-by ``PT.alloc_step_incremental`` — O(crossings) probed keys per token
+by ``PageTable.alloc_step_incremental`` — O(crossings) probed keys per token
 instead of the old O(B·max_pages) full re-probe — while the paper's
 wait-free ``lookup_pages`` remains the authoritative read for admission,
 Section 4.3 rebuilds, and the CI verification mode
-(``PT.verify_block_table``).
+(``PageTable.verify_block_table``).
 
 The megastep fuses K decode tokens into one ``jax.lax.scan``: greedy
 sampling runs in-graph (token t+1 = argmax of token t's logits), page
@@ -871,7 +871,8 @@ def _manual_decode_parts(cfg, *, S_max: int, rules,
             # materialized slots view, no per-chip compaction pass
             lp, fused_bt = None, _local_block_table(bt, chip_pd, npr)
         else:
-            slots = PT.block_table_slots(bt, positions, page_size=page_size)
+            slots = PT.PageTable.block_table_slots(
+                bt, positions, page_size=page_size)
             lp, fused_bt = paged.compact_local(slots, chip_pd, npr, cap), None
         new_state["table"] = table
         new_state["block_table"] = bt
@@ -1147,7 +1148,7 @@ def _page_ops(cfg, state, positions, active, *, S_max, page_size, n_chips,
     """Once-per-token page-table work: incremental allocation (only the
     page-boundary crossings probe the table) + the block-table read served
     from the persistent cache — O(crossings) probes instead of the
-    O(B·max_pages) full re-probe (``PT.lookup_pages`` stays the
+    O(B·max_pages) full re-probe (``PageTable.lookup_pages`` stays the
     authoritative path for admission / rebuild / verification).  With
     ``fused`` the slots view + per-chip compaction are skipped entirely:
     the fused kernel walks the raw block table in-kernel."""
@@ -1157,7 +1158,8 @@ def _page_ops(cfg, state, positions, active, *, S_max, page_size, n_chips,
         page_size=page_size, active=active)
     if fused:
         return table, write_slot, aborts, bt, None
-    slots = PT.block_table_slots(bt, positions, page_size=page_size)
+    slots = PT.PageTable.block_table_slots(bt, positions,
+                                           page_size=page_size)
     B = positions.shape[0]
     cap = paged.capacity(B, maxP, n_chips,
                          factor=cfg.page_capacity_factor)

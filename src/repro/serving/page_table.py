@@ -33,10 +33,14 @@ re-admitted slot could read a reclaimed page.
 Probe strategies: the ``PageTable`` facade binds one ``core/
 probe_strategies`` strategy (``linear`` / ``robinhood`` / ``hopscotch``)
 at construction and threads it through every operation — callers hold one
-facade object instead of plumbing a keyword through every call site.  The
-historical module-level functions remain as thin aliases bound to the
-default linear facade; they are DEPRECATED in favour of the facade and kept
-for one PR for external callers.
+facade object (``for_strategy``) instead of plumbing a keyword through
+every call site.  (The historical module-level free functions were removed
+once the last in-repo callers migrated; the facade is the only API.)
+
+The distributed flavour — hash-prefix sharding of the key space across
+host groups, per-shard headroom, lazy incremental resize — lives one layer
+up in ``serving/sharded_table.ShardedPageTable``, which routes to one
+table-per-shard built from this module's primitives.
 """
 from __future__ import annotations
 
@@ -416,27 +420,3 @@ def for_strategy(strategy: str = "linear") -> PageTable:
     jit sees stable bound methods and log-once fallback state persists
     across call sites (engine, batcher, benchmarks)."""
     return PageTable(strategy)
-
-
-# ---------------------------------------------------------------------------
-# DEPRECATED module-level aliases (kept for one PR).
-#
-# Historical call sites used free functions with the linear strategy baked
-# in.  They now delegate to the shared linear facade; new code should hold
-# a ``PageTable(strategy)`` instance (see ``for_strategy``) instead.
-
-_LINEAR = for_strategy("linear")
-
-create_table = _LINEAR.create_table
-alloc_step = _LINEAR.alloc_step
-alloc_step_incremental = _LINEAR.alloc_step_incremental
-prefill_alloc = _LINEAR.prefill_alloc
-free_sequences = _LINEAR.free_sequences
-lookup_pages = _LINEAR.lookup_pages
-rebuild_block_table = _LINEAR.rebuild_block_table
-block_table_slots = _LINEAR.block_table_slots
-invalidate_block_rows = _LINEAR.invalidate_block_rows
-verify_block_table = _LINEAR.verify_block_table
-rehash = _LINEAR.rehash
-stats = _LINEAR.stats
-headroom = _LINEAR.headroom

@@ -5,13 +5,16 @@ See README.md in this directory for the design: request lifecycle
 (``request``), occupancy forecaster (``forecast``), pluggable policies
 (``policy``), and the scheduler + proactive headroom controller
 (``scheduler``).  ``workload`` builds deterministic synthetic traffic for
-bench / CI soak.
+bench / CI soak.  ``router`` stacks one scheduler per table shard behind
+hash-prefix routing (``serving/sharded_table``) so the proactive no-ABORT
+proof restates per shard.
 """
 from repro.serving.sched.forecast import (Forecast, OccupancyForecaster,
                                           pages_held, pages_needed)
 from repro.serving.sched.policy import (DeadlinePolicy, POLICIES, Policy,
                                         PriorityPolicy, get_policy)
 from repro.serving.sched.request import (DONE, QUEUED, RUNNING, Request)
+from repro.serving.sched.router import PrefixRouter
 from repro.serving.sched.scheduler import (Plan, RoundStats, SchedStats,
                                            Scheduler)
 from repro.serving.sched.workload import (churn_request, churn_workload,
@@ -21,6 +24,6 @@ __all__ = [
     "DONE", "QUEUED", "RUNNING", "Request",
     "Forecast", "OccupancyForecaster", "pages_held", "pages_needed",
     "Policy", "PriorityPolicy", "DeadlinePolicy", "POLICIES", "get_policy",
-    "Plan", "RoundStats", "SchedStats", "Scheduler",
+    "Plan", "RoundStats", "SchedStats", "Scheduler", "PrefixRouter",
     "churn_request", "churn_workload", "synthetic_workload",
 ]

@@ -58,17 +58,41 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _atomic_json(path: str, doc: dict) -> None:
+    """Write/overwrite a JSON file atomically: tmp + fsync + os.replace —
+    safe even when ``path`` already exists (the re-save path)."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def save(ckpt_dir: str, step: int, state, state_axes=None,
          extra: Optional[dict] = None) -> str:
     """Atomic checkpoint of a pytree.  Returns the committed path.
 
-    A step that is already committed is left untouched: training is
-    restart-deterministic (batches are a pure function of step), so the
-    state at a given step is content-identical — skipping keeps the commit
-    unconditionally atomic (no rename shuffle with crash windows)."""
+    A step that is already committed keeps its LEAVES untouched: training
+    is restart-deterministic (batches are a pure function of step), so the
+    state at a given step is content-identical — skipping the leaf rewrite
+    keeps the commit unconditionally atomic (no rename shuffle with crash
+    windows).  The ``extra`` METADATA is different: it can legitimately
+    change between re-saves of the same step (the shard manifest after an
+    elastic remesh is the motivating case), so a re-save merges the new
+    ``extra`` into the committed manifest atomically (tmp + ``os.replace``)
+    instead of silently dropping it."""
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     if os.path.exists(final):
+        if extra:
+            mpath = os.path.join(final, "manifest.json")
+            with open(mpath) as f:
+                manifest = json.load(f)
+            merged = {**manifest.get("extra", {}), **extra}
+            if merged != manifest.get("extra"):
+                manifest["extra"] = merged
+                _atomic_json(mpath, manifest)
         return final
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -147,6 +171,98 @@ def prune(ckpt_dir: str, keep: int = 3) -> None:
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
                       ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# Multi-host sharded checkpoints (the distributed page table's format).
+#
+# Each host writes ONLY the shard it owns (``save_shard`` — atomic
+# per-shard dir), and the step becomes visible only when ``commit_sharded``
+# lands ``shards.json`` (written LAST, via tmp + os.replace).  Because the
+# commit file replace is atomic even when the step is already committed,
+# re-committing with a NEW shard manifest — after an elastic remesh moved
+# prefix ranges, or after resharding — updates the checkpoint in place with
+# no crash window.  Restore is shard-count-agnostic: the saved unit is raw
+# per-shard arrays + the routing manifest, and the reader re-homes them
+# onto however many shards the new job brings.
+
+
+def save_shard(ckpt_dir: str, step: int, shard_id: int, state,
+               extra: Optional[dict] = None) -> str:
+    """One host's shard write: ``step_<N>/shard_<S>/`` (atomic tmp+rename;
+    a re-save of the same shard replaces it).  NOT a commit — the step
+    stays invisible to ``latest_sharded_step`` until ``commit_sharded``."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(final, exist_ok=True)
+    sdir = os.path.join(final, f"shard_{shard_id:04d}")
+    tmp = sdir + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"shard": int(shard_id), "leaves": {}, "extra": extra or {}}
+    for key, leaf in _flatten(state).items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {"file": fname, "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(sdir):
+        shutil.rmtree(sdir)
+    os.rename(tmp, sdir)
+    return sdir
+
+
+def commit_sharded(ckpt_dir: str, step: int,
+                   shard_manifest: Optional[dict] = None,
+                   extra: Optional[dict] = None) -> str:
+    """The commit point: enumerate the written shard dirs and land
+    ``shards.json`` atomically.  ``shard_manifest`` carries the routing
+    manifest (``ShardManifest.to_json`` parsed dict) so restore knows the
+    prefix -> owner map the shards were written under."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    shards = sorted(d for d in os.listdir(final)
+                    if d.startswith("shard_") and not d.endswith(".tmp"))
+    assert shards, f"commit_sharded({step}) with no shard dirs"
+    _atomic_json(os.path.join(final, "shards.json"),
+                 {"step": int(step), "shards": shards,
+                  "shard_manifest": shard_manifest, "extra": extra or {}})
+    return os.path.join(final, "shards.json")
+
+
+def latest_sharded_step(ckpt_dir: str) -> Optional[int]:
+    """Latest COMMITTED sharded step (shards.json present)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and d.split("_")[1].isdigit()
+             and os.path.exists(os.path.join(ckpt_dir, d, "shards.json"))]
+    return max(steps) if steps else None
+
+
+def restore_sharded(ckpt_dir: str, *, step: Optional[int] = None
+                    ) -> Tuple[list, Optional[dict], int]:
+    """Read every shard of a committed sharded step as raw arrays (no
+    template — shard payloads are variable-length).  Returns
+    ``([{key: array, ..., "_extra": dict} per shard], shard_manifest,
+    step)``; the caller re-homes the payloads onto its own shard count."""
+    step = latest_sharded_step(ckpt_dir) if step is None else step
+    assert step is not None, f"no committed sharded checkpoint in {ckpt_dir}"
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(final, "shards.json")) as f:
+        doc = json.load(f)
+    out = []
+    for sdir in doc["shards"]:
+        with open(os.path.join(final, sdir, "manifest.json")) as f:
+            manifest = json.load(f)
+        shard = {"_extra": manifest.get("extra", {})}
+        for key, entry in manifest["leaves"].items():
+            shard[key] = np.load(os.path.join(final, sdir, entry["file"]))
+        out.append(shard)
+    return out, doc.get("shard_manifest"), step
 
 
 class CheckpointManager:

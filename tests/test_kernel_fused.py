@@ -134,7 +134,8 @@ def test_slots_ref_matches_serving_view():
     pos = jnp.asarray(rng.integers(0, 16 * 8, 8), jnp.int32)
     np.testing.assert_array_equal(
         np.asarray(block_table_slots_ref(bt, pos, page_size=8)),
-        np.asarray(PT.block_table_slots(bt, pos, page_size=8)))
+        np.asarray(PT.PageTable.block_table_slots(bt, pos,
+                                                  page_size=8)))
 
 
 def test_fused_byte_accounting():
@@ -281,8 +282,9 @@ def test_adversarial_rebuild_falls_back_bitwise():
     np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_o))
     np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_o))
 
-    bt_k = PT.rebuild_block_table(table, seq_ids, MP, use_kernel=True)
-    bt_o = PT.rebuild_block_table(table, seq_ids, MP, use_kernel=False)
+    pt = PT.for_strategy("linear")
+    bt_k = pt.rebuild_block_table(table, seq_ids, MP, use_kernel=True)
+    bt_o = pt.rebuild_block_table(table, seq_ids, MP, use_kernel=False)
     np.testing.assert_array_equal(np.asarray(bt_k), np.asarray(bt_o))
 
 

@@ -316,7 +316,7 @@ for arch, shape, axes, over in CASES:
                                                  np.asarray(y))),
                 st[k], mst[k])))
             assert ok, (arch, impl, k, "state leaf diverged")
-        assert int(PT.verify_block_table(
+        assert int(PT.for_strategy("linear").verify_block_table(
             mst["table"], mst["seq_ids"], mst["pos"], mst["block_table"],
             page_size=4)) == 0, (arch, impl)
     print(arch, shape, over, "megastep == single steps OK (gspmd+manual)")

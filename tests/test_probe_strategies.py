@@ -315,12 +315,19 @@ def test_probe_kernel_guard():
         PK.probe_lookup(ht, keys, use_kernel=False, strategy="hopscotch")
 
 
-def test_deprecated_module_aliases_still_work():
-    """One-PR deprecation window: the old PT.* module functions remain
-    callable and serve the linear strategy."""
-    table = PT.create_table(16, seed=0)
+def test_module_aliases_removed():
+    """The deprecated PT.* module-function aliases (PR 7's one-PR window)
+    are gone: the strategy-bound facade is the only page-table API, so no
+    call site can silently bake in the linear strategy again."""
+    for name in ("create_table", "alloc_step", "alloc_step_incremental",
+                 "prefill_alloc", "free_sequences", "lookup_pages",
+                 "rebuild_block_table", "rehash", "headroom"):
+        assert not hasattr(PT, name), f"PT.{name} alias resurfaced"
+    # ...and the facade serves the same calls
+    pt = PT.for_strategy("linear")
+    table = pt.create_table(16, seed=0)
     seq = jnp.arange(2, dtype=jnp.uint32)
     pos = jnp.zeros((2,), jnp.int32)
-    st = PT.alloc_step(table, seq, pos, page_size=4)
+    st = pt.alloc_step(table, seq, pos, page_size=4)
     assert not np.any(np.asarray(st.aborted))
-    assert PT.headroom(st.table).strategy == "linear"
+    assert pt.headroom(st.table).strategy == "linear"

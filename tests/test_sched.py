@@ -13,6 +13,8 @@ from repro.launch.serve import ContinuousBatcher
 from repro.models.registry import get_model
 from repro.serving import engine as EG
 from repro.serving import page_table as PT
+
+LPT = PT.for_strategy("linear")  # the strategy-bound facade
 from repro.serving.sched import (DeadlinePolicy, OccupancyForecaster,
                                  PriorityPolicy, Request, Scheduler,
                                  get_policy, pages_held, pages_needed,
@@ -114,15 +116,15 @@ def test_policy_preempt_candidates():
 
 def test_probe_stats_scope_isolates():
     PT.probe_stats_reset()
-    table = PT.create_table(32)
+    table = LPT.create_table(32)
     seq = jnp.arange(2, dtype=jnp.int32)
-    PT.lookup_pages(table, seq, jnp.zeros(2, jnp.int32), page_size=4,
+    LPT.lookup_pages(table, seq, jnp.zeros(2, jnp.int32), page_size=4,
                     max_pages=4)
     outer = PT.PROBE_STATS["keys_probed"]
     assert outer > 0
     with PT.probe_stats_scope() as ps:
         assert ps["keys_probed"] == 0        # scope starts clean
-        PT.lookup_pages(table, seq, jnp.zeros(2, jnp.int32), page_size=4,
+        LPT.lookup_pages(table, seq, jnp.zeros(2, jnp.int32), page_size=4,
                         max_pages=4)
         inner = ps["keys_probed"]
         assert inner == outer                # same op, same count
@@ -189,17 +191,17 @@ def test_double_evict_idempotent():
     assert sched.evict(b) is False
 
     # table layer: double free of the same sequence is a no-op
-    table = PT.create_table(16)
+    table = LPT.create_table(16)
     seq = jnp.arange(2, dtype=jnp.int32)
     for p in range(8):
-        table, ws, ab = PT.alloc_step(table, seq,
+        table, ws, ab = LPT.alloc_step(table, seq,
                                       jnp.full((2,), p, jnp.int32),
                                       page_size=4)
     mask = jnp.asarray([True, False])
-    table = PT.free_sequences(table, seq, jnp.full((2,), 8, jnp.int32),
+    table = LPT.free_sequences(table, seq, jnp.full((2,), 8, jnp.int32),
                               page_size=4, max_pages=4, active=mask)
     k1, t1 = int(table.num_keys), int(table.num_tombs)
-    table = PT.free_sequences(table, seq, jnp.full((2,), 8, jnp.int32),
+    table = LPT.free_sequences(table, seq, jnp.full((2,), 8, jnp.int32),
                               page_size=4, max_pages=4, active=mask)
     assert (int(table.num_keys), int(table.num_tombs)) == (k1, t1)
 

@@ -16,6 +16,8 @@ from repro.models.registry import get_model
 from repro.serving import engine as EG
 from repro.serving import page_table as PT
 
+LPT = PT.for_strategy("linear")  # the strategy-bound facade
+
 DECODE_ARCHS = ["qwen2.5-32b", "qwen1.5-32b", "codeqwen1.5-7b",
                 "granite-moe-1b-a400m", "qwen3-moe-235b-a22b",
                 "gemma3-12b", "mamba2-2.7b", "zamba2-1.2b", "qwen2-vl-7b",
@@ -187,7 +189,7 @@ def test_megastep_matches_single_steps(arch, over):
     np.testing.assert_array_equal(np.asarray(mtoks), ref_toks)
     _assert_state_bitwise(ref_state, mstate)
     if "table" in mstate:
-        assert int(PT.verify_block_table(
+        assert int(LPT.verify_block_table(
             mstate["table"], mstate["seq_ids"], mstate["pos"],
             mstate["block_table"], page_size=4)) == 0
 
@@ -260,37 +262,37 @@ def test_block_table_evict_readmit_invalidation():
     (stale slot); with it the cache stays coherent with the wait-free
     lookup at every step."""
     n_pages, B, page_size, maxP = 16, 2, 2, 4
-    table = PT.create_table(n_pages)
+    table = LPT.create_table(n_pages)
     seq = jnp.arange(B, dtype=jnp.int32)
     bt = jnp.full((B, maxP), -1, jnp.int32)
     for pos in range(6):
-        (table, ws, ab), bt = PT.alloc_step_incremental(
+        (table, ws, ab), bt = LPT.alloc_step_incremental(
             table, seq, jnp.full((B,), pos, jnp.int32), bt,
             page_size=page_size)
         assert (np.asarray(ws) >= 0).all() and not np.asarray(ab).any()
     stale_row = np.asarray(bt[0]).copy()
     assert (stale_row[:3] >= 0).all()
     # evict lane 0; its pages become tombstones, immediately reclaimable
-    table = PT.free_sequences(table, seq, jnp.full((B,), 6, jnp.int32),
+    table = LPT.free_sequences(table, seq, jnp.full((B,), 6, jnp.int32),
                               page_size=page_size, max_pages=maxP,
                               active=jnp.asarray([True, False]))
-    bt = PT.invalidate_block_rows(bt, jnp.asarray([True, False]))
+    bt = LPT.invalidate_block_rows(bt, jnp.asarray([True, False]))
     assert (np.asarray(bt[0]) == -1).all()
     assert (np.asarray(bt[1]) == np.asarray(
-        PT.rebuild_block_table(table, seq, maxP))[1]).all()
+        LPT.rebuild_block_table(table, seq, maxP))[1]).all()
     # re-admit lane 0 with a fresh sequence id; had the stale row survived,
     # verify_block_table would flag it as soon as its pages went live
     seq = seq.at[0].set(B)
     stale_bt = bt.at[0].set(jnp.asarray(stale_row))
     for pos in range(6):
         p = jnp.full((B,), pos, jnp.int32)
-        (table, ws, ab), bt = PT.alloc_step_incremental(
+        (table, ws, ab), bt = LPT.alloc_step_incremental(
             table, seq, p, bt, page_size=page_size)
         assert (np.asarray(ws) >= 0).all() and not np.asarray(ab).any()
-        assert int(PT.verify_block_table(table, seq, p, bt,
+        assert int(LPT.verify_block_table(table, seq, p, bt,
                                          page_size=page_size)) == 0
     # the hazard is real: the un-invalidated row disagrees with the lookup
-    assert int(PT.verify_block_table(
+    assert int(LPT.verify_block_table(
         table, seq, jnp.full((B,), 0, jnp.int32), stale_bt,
         page_size=page_size)) > 0
 
@@ -301,37 +303,37 @@ def test_block_table_matches_wait_free_lookup_under_churn():
     lookup after every step, while probing ~page_size x fewer keys."""
     n_pages, B, page_size, maxP = 64, 4, 4, 8
     rng = np.random.default_rng(0)
-    table = PT.create_table(n_pages)
+    table = LPT.create_table(n_pages)
     seq = np.arange(B, dtype=np.int32)
     pos = np.zeros(B, np.int32)
     next_id = B
     bt = jnp.full((B, maxP), -1, jnp.int32)
     PT.probe_stats_reset()
     for round_ in range(40):
-        (table, ws, ab), bt = PT.alloc_step_incremental(
+        (table, ws, ab), bt = LPT.alloc_step_incremental(
             table, jnp.asarray(seq), jnp.asarray(pos), bt,
             page_size=page_size)
         assert not np.asarray(ab).any()
         pos += 1
-        assert int(PT.verify_block_table(
+        assert int(LPT.verify_block_table(
             table, jnp.asarray(seq), jnp.asarray(pos - 1), bt,
             page_size=page_size)) == 0
         if round_ % 7 == 6:                 # evict a random lane, re-admit
             v = int(rng.integers(B))
             mask = np.zeros(B, bool)
             mask[v] = True
-            table = PT.free_sequences(
+            table = LPT.free_sequences(
                 table, jnp.asarray(seq), jnp.asarray(pos),
                 page_size=page_size, max_pages=maxP,
                 active=jnp.asarray(mask))
-            bt = PT.invalidate_block_rows(bt, jnp.asarray(mask))
+            bt = LPT.invalidate_block_rows(bt, jnp.asarray(mask))
             seq[v] = next_id
             next_id += 1
             pos[v] = 0
             bt = jnp.where(jnp.asarray(mask)[:, None],
-                           PT.rebuild_block_table(table, jnp.asarray(seq),
+                           LPT.rebuild_block_table(table, jnp.asarray(seq),
                                                   maxP), bt)
-            assert int(PT.verify_block_table(
+            assert int(LPT.verify_block_table(
                 table, jnp.asarray(seq), jnp.asarray(pos), bt,
                 page_size=page_size)) == 0
 
@@ -365,7 +367,7 @@ def test_page_allocator_tombstone_reuse():
     churn, live+tombstone occupancy stays bounded and allocation never
     aborts — the paper's Prop. 2 as a memory allocator."""
     n_pages = 64
-    table = PT.create_table(n_pages)
+    table = LPT.create_table(n_pages)
     page_size = 4
     maxP = 8
     rng = np.random.default_rng(0)
@@ -378,7 +380,7 @@ def test_page_allocator_tombstone_reuse():
             next_id += 1
         seq = jnp.asarray(sorted(active), jnp.int32)
         pos = jnp.asarray([active[int(s)] for s in seq], jnp.int32)
-        table, slots, aborted = PT.alloc_step(table, seq, pos,
+        table, slots, aborted = LPT.alloc_step(table, seq, pos,
                                               page_size=page_size)
         assert (np.asarray(slots) >= 0).all(), "allocator aborted"
         assert not np.asarray(aborted).any()
@@ -389,7 +391,7 @@ def test_page_allocator_tombstone_reuse():
         if done:
             dseq = jnp.asarray(done, jnp.int32)
             dpos = jnp.asarray([active[s] for s in done], jnp.int32)
-            table = PT.free_sequences(table, dseq, dpos,
+            table = LPT.free_sequences(table, dseq, dpos,
                                       page_size=page_size, max_pages=maxP)
             for s in done:
                 del active[s]
@@ -401,13 +403,13 @@ def test_page_allocator_tombstone_reuse():
 
 
 def test_lookup_pages_consistency():
-    table = PT.create_table(32)
+    table = LPT.create_table(32)
     seq = jnp.arange(3, dtype=jnp.int32)
     for pos in range(10):
-        table, ws, _ = PT.alloc_step(table, seq,
+        table, ws, _ = LPT.alloc_step(table, seq,
                                      jnp.full((3,), pos, jnp.int32),
                                      page_size=4)
-    slots = PT.lookup_pages(table, seq, jnp.full((3,), 9, jnp.int32),
+    slots = LPT.lookup_pages(table, seq, jnp.full((3,), 9, jnp.int32),
                             page_size=4, max_pages=8)
     s = np.asarray(slots)
     assert (s[:, :3] >= 0).all()        # pages 0..2 live (pos 9 -> page 2)
@@ -423,15 +425,15 @@ def test_lookup_pages_consistency():
 def test_alloc_monotone_pages(psize, steps, B):
     """Each sequence owns exactly ceil(pos/psize) pages, all distinct."""
     n_pages = 256
-    table = PT.create_table(n_pages)
+    table = LPT.create_table(n_pages)
     seq = jnp.arange(B, dtype=jnp.int32)
     for pos in range(steps):
-        table, _, _ = PT.alloc_step(table, seq,
+        table, _, _ = LPT.alloc_step(table, seq,
                                     jnp.full((B,), pos, jnp.int32),
                                     page_size=psize)
     expect = -(-steps // psize)
     assert int(table.num_keys) == B * expect
-    slots = PT.lookup_pages(table, seq, jnp.full((B,), steps - 1, jnp.int32),
+    slots = LPT.lookup_pages(table, seq, jnp.full((B,), steps - 1, jnp.int32),
                             page_size=psize, max_pages=64)
     s = np.asarray(slots)
     live = s[s >= 0]
@@ -448,8 +450,8 @@ def test_page_pool_exhaustion_lifecycle():
     throughout the reclaim."""
     import functools
     n_pages, B, page_size = 16, 4, 2
-    step = jax.jit(functools.partial(PT.alloc_step, page_size=page_size))
-    table = PT.create_table(n_pages)
+    step = jax.jit(functools.partial(LPT.alloc_step, page_size=page_size))
+    table = LPT.create_table(n_pages)
     seq = jnp.arange(B, dtype=jnp.int32)
     steps_to_fill = (n_pages // B) * page_size          # 8 -> pool full
     for pos in range(steps_to_fill):
@@ -462,10 +464,10 @@ def test_page_pool_exhaustion_lifecycle():
     assert np.asarray(ab).all(), "abort not surfaced"
     assert (np.asarray(ws) == -1).all(), "wrapped write_slot"
     # evict half -> tombstones; freed slots are re-claimable IMMEDIATELY
-    freed = np.asarray(PT.lookup_pages(
+    freed = np.asarray(LPT.lookup_pages(
         table, seq[:2], jnp.full((2,), steps_to_fill - 1, jnp.int32),
         page_size=page_size, max_pages=n_pages))
-    table = PT.free_sequences(table, seq[:2],
+    table = LPT.free_sequences(table, seq[:2],
                               jnp.full((2,), steps_to_fill, jnp.int32),
                               page_size=page_size, max_pages=n_pages)
     assert int(table.num_tombs) == n_pages // 2
@@ -578,7 +580,7 @@ def test_decode_state_after_eviction_reuse():
         logits, state = step(params, state, tokens[:, t:t + 1], pos)
         if ref_logits is None:
             ref_logits = logits
-    state["table"] = PT.free_sequences(
+    state["table"] = LPT.free_sequences(
         state["table"], state["seq_ids"], jnp.full((B,), T, jnp.int32),
         page_size=4, max_pages=8)
     state["seq_ids"] = state["seq_ids"] + B

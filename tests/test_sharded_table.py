@@ -1,0 +1,294 @@
+"""The distributed page table: hash-prefix routing (``dist/table_shard``),
+the lazy incremental resize with its recorded-trace lookup parity, the
+per-shard headroom invariant, the sharded checkpoint, and the simulated
+multi-host storm (``tests/_multihost``) as a pytest entry point."""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+import jax.numpy as jnp
+
+import _multihost as MH
+from repro.core import batched as BT
+from repro.core import encoding as E
+from repro.dist import table_shard as TS
+from repro.serving import page_table as PT
+from repro.serving.sched import synthetic_workload
+from repro.serving.sharded_table import (ShardedPageTable, checkpoint_sharded,
+                                         plan_table_shards,
+                                         restore_sharded_table)
+
+
+# --- manifest routing ------------------------------------------------------
+
+def test_manifest_balanced_routing():
+    man = TS.ShardManifest.balanced(4)
+    seqs = np.arange(1, 1025, dtype=np.uint32)
+    owners = man.owner_of_seq(seqs)
+    counts = np.bincount(owners, minlength=4)
+    assert counts.sum() == 1024 and (counts > 128).all(), counts
+    # routing is a pure function of the id — stable across calls
+    assert (man.owner_of_seq(seqs) == owners).all()
+
+
+def test_manifest_reassign_keeps_survivor_prefixes():
+    man = TS.ShardManifest.balanced(4)
+    new = man.reassign(2)
+    assert 2 not in new.live_shards() and new.live_shards() == (0, 1, 3)
+    for p, o in enumerate(man.owners):
+        if o != 2:      # survivors keep their ranges — live seqs undisturbed
+            assert new.owners[p] == o
+        else:
+            assert new.owners[p] in (0, 1, 3)
+    # down to one survivor is allowed; reassigning the last one is not
+    last = new.reassign(0).reassign(1)
+    assert last.live_shards() == (3,)
+    try:
+        last.reassign(3)
+        assert False, "reassigning the last shard must raise"
+    except ValueError:
+        pass
+
+
+def test_manifest_json_roundtrip():
+    man = TS.ShardManifest.balanced(3).reassign(1)
+    back = TS.ShardManifest.from_json(man.to_json())
+    assert back == man
+
+
+def test_plan_table_shards():
+    class FakeMesh:
+        def __init__(self, shape):
+            self.shape = shape
+    assert plan_table_shards(FakeMesh({"pod": 2, "data": 16})) == 2
+    assert plan_table_shards(FakeMesh({"data": 16, "model": 16})) == 1
+    assert plan_table_shards(object()) == 1
+
+
+# --- lazy incremental resize ----------------------------------------------
+
+def _trace_replay(grow_at, strategy="linear"):
+    """Drive one shard through a deterministic mixed op trace, growing
+    lazily at round ``grow_at`` (None = never, big table from the start);
+    record a digest of every round's lookup answers over a fixed probe set."""
+    rng = np.random.default_rng(7)
+    m0 = 256 if grow_at is None else 64
+    shard = TS.TableShard.create(0, m0, seed=3, strategy=strategy)
+    universe = rng.choice(4096, size=96, replace=False).astype(np.uint32)
+    live: set = set()
+    trace = []
+    migrating_rounds = 0
+    for rnd in range(14):
+        if rnd == grow_at:
+            shard = shard.begin_migration(256)
+        fresh = [k for k in universe if k not in live][:6]
+        shard, ret, _ = shard.insert(jnp.asarray(fresh, jnp.uint32))
+        assert not int(np.asarray(ret == 2).sum()), "unexpected ABORT"
+        live |= set(int(k) for k in fresh)
+        drops = rng.choice(sorted(live), size=3, replace=False)
+        shard, _, _ = shard.delete(jnp.asarray(drops, jnp.uint32))
+        live -= set(int(k) for k in drops)
+        # slow sweep so the migration stays in flight across many rounds
+        shard, _ = shard.sweep_migrate(8)
+        migrating_rounds += int(shard.migrating)
+        found, _, _ = shard.find(jnp.asarray(universe))
+        found = np.asarray(found)
+        assert set(universe[found].tolist()) == live
+        trace.append(hashlib.sha256(found.tobytes()).hexdigest())
+    return trace, migrating_rounds, shard
+
+
+def test_lazy_resize_recorded_trace_parity():
+    """Lookups answer-identically THROUGHOUT the migration: the recorded
+    per-round answer trace of the lazily-growing shard equals the trace of
+    a shard that had the full capacity from round 0."""
+    lazy, mig_rounds, shard = _trace_replay(grow_at=2)
+    eager, _, _ = _trace_replay(grow_at=None)
+    assert lazy == eager
+    # the parity must actually have spanned a live migration, and the
+    # sweep must have finished it
+    assert mig_rounds >= 3 and not shard.migrating
+
+
+def test_lazy_resize_trace_parity_hopscotch():
+    lazy, mig_rounds, shard = _trace_replay(grow_at=2, strategy="hopscotch")
+    eager, _, _ = _trace_replay(grow_at=None, strategy="hopscotch")
+    assert lazy == eager and mig_rounds >= 3 and not shard.migrating
+
+
+def test_migration_headroom_invariant():
+    """``free_cells = m_new - live_new - live_old`` through the whole
+    migration — and inserting exactly ``free_cells`` fresh keys mid-flight
+    never ABORTs (the committed-cells argument the per-shard admission
+    proof leans on)."""
+    shard = TS.TableShard.create(0, 32, seed=1)
+    shard, _, _ = shard.insert(jnp.arange(100, 120, dtype=jnp.uint32))
+    shard = shard.begin_migration(64)
+    assert shard.free_cells() == 64 - 20
+    # interleave sweeps with inserts; the invariant holds at every step
+    fresh = iter(range(200, 400))
+    while shard.migrating:
+        shard, _ = shard.sweep_migrate(4)
+        ks = jnp.asarray([next(fresh) for _ in range(2)], jnp.uint32)
+        shard, ret, _ = shard.insert(ks)
+        assert not int(np.asarray(ret == 2).sum())
+        live_new = int(shard.table.num_keys)
+        live_old = 0 if shard.old is None else int(shard.old.num_keys)
+        assert shard.free_cells() == 64 - live_new - live_old
+    # stable again: fill to the brim with zero ABORTs
+    room = shard.free_cells()
+    ks = jnp.asarray([next(fresh) for _ in range(room)], jnp.uint32)
+    shard, ret, _ = shard.insert(ks)
+    assert int(np.asarray(ret == 1).sum()) == room
+    assert shard.free_cells() == 0
+
+
+def test_moved_markers():
+    """Every migrated entry leaves its marker: TOMBSTONE + meta bit for the
+    metadata-free strategies; the EMPTY cell itself under hopscotch."""
+    shard = TS.TableShard.create(0, 32, seed=2)
+    keys = jnp.arange(50, 60, dtype=jnp.uint32)
+    shard, _, _ = shard.insert(keys)
+    shard = shard.begin_migration(64)
+    _, old_slots = BT.find_batch(shard.old, keys)
+    shard, moves = shard.migrate_keys(keys[:4])
+    assert moves.n == 4
+    tab = np.asarray(shard.old.table)
+    meta = np.asarray(shard.old.meta)
+    for s in np.asarray(old_slots)[:4]:
+        assert tab[s] == E.TOMBSTONE
+        assert meta[s // 32] & (1 << (s % 32))
+    for s in np.asarray(old_slots)[4:]:       # unmigrated: no marker yet
+        assert not (meta[s // 32] & (1 << (s % 32)))
+
+    hop = TS.TableShard.create(0, 32, seed=2, strategy="hopscotch")
+    hop, _, _ = hop.insert(keys)
+    hop = hop.begin_migration(64)
+    _, old_slots = BT.find_batch(hop.old, keys, strategy="hopscotch")
+    hop, moves = hop.migrate_keys(keys[:4])
+    assert moves.n == 4
+    tab = np.asarray(hop.old.table)
+    assert all(tab[s] == E.EMPTY for s in np.asarray(old_slots)[:4])
+
+
+def test_migration_moves_carry_pages():
+    """MoveSet parity: applying the (src, dst) moves to a shadow page map
+    keeps every key's page addressable at the slot ``find`` reports."""
+    shard = TS.TableShard.create(0, 64, seed=5)
+    keys = jnp.arange(300, 340, dtype=jnp.uint32)
+    shard, _, _ = shard.insert(keys)
+    _, slots = BT.find_batch(shard.table, keys)
+    pages = {int(s): int(k) for s, k in zip(np.asarray(slots),
+                                            np.asarray(keys))}
+    old_pages = dict(pages)
+    shard = shard.begin_migration(128)
+    new_pages: dict = {}
+    while shard.migrating:
+        shard, mv = shard.sweep_migrate(8)
+        for src, dst in zip(mv.old_slots, mv.new_slots):
+            new_pages[int(dst)] = old_pages.pop(int(src))
+    assert not old_pages and len(new_pages) == 40
+    found, slots, in_old = shard.find(keys)
+    assert bool(np.asarray(found).all()) and not bool(np.asarray(in_old).any())
+    for s, k in zip(np.asarray(slots), np.asarray(keys)):
+        assert new_pages[int(s)] == int(k)
+
+
+# --- the routed facade -----------------------------------------------------
+
+def test_sharded_alloc_routes_to_owners():
+    spt = ShardedPageTable(4, 32, page_size=4, max_pages=8)
+    seqs = np.arange(1, 13, dtype=np.uint32)
+    owners = spt.owner_of_seq(seqs)
+    pos = np.zeros(12, np.int64)
+    ws, ab, moves = spt.alloc_step(seqs, pos)
+    assert not moves and not ab.any() and (ws >= 0).all()
+    assert np.unique(ws).size == 12
+    for slot, sid in zip(ws, owners):
+        st = spt._shards[int(sid)]
+        assert st.cur.start <= slot < st.cur.start + st.cur.size
+    # every shard's headroom speaks the scheduler's Headroom dialect
+    for sid in spt.live_shards():
+        h = spt.headroom(sid)
+        assert h.free_cells == 32 - h.live_pages and h.strategy == "linear"
+
+
+def test_sharded_lose_shard_reroutes():
+    spt = ShardedPageTable(3, 32, page_size=4, max_pages=8)
+    seqs = np.arange(1, 10, dtype=np.uint32)
+    spt.alloc_step(seqs, np.zeros(9, np.int64))
+    lost = spt.live_shards()[-1]
+    lost_live = spt._shards[lost].shard.live_pages()
+    before = spt.total_live_pages()
+    spt.lose_shard(lost)
+    assert lost not in spt.live_shards()
+    assert spt.total_live_pages() == before - lost_live
+    # the dead shard's sequences now route to survivors
+    assert lost not in set(spt.owner_of_seq(seqs).tolist())
+
+
+# --- sharded checkpoint ----------------------------------------------------
+
+def test_checkpoint_restore_other_shard_count(tmp_path):
+    spt = ShardedPageTable(4, 48, page_size=4, max_pages=8)
+    seqs = np.arange(1, 17, dtype=np.uint32)
+    for pos in range(8):
+        spt.alloc_step(seqs, np.full(16, pos, np.int64))
+    spt.grow_shard(spt.live_shards()[0], 96)   # save MID-migration
+    n_live = spt.total_live_pages()
+    checkpoint_sharded(spt, str(tmp_path), step=5)
+
+    for n_shards in (2, 3):
+        back, step = restore_sharded_table(str(tmp_path), n_shards, 96,
+                                           page_size=4, max_pages=8)
+        assert step == 5 and back.total_live_pages() == n_live
+        bt = back.lookup_pages(seqs, np.full(16, 7, np.int64))
+        assert (bt[:, :2] >= 0).all() and (bt[:, 2:] == -1).all()
+
+
+def test_checkpoint_recommit_after_remesh(tmp_path):
+    """The re-save path: losing a shard after the commit re-commits the
+    SAME step with the reassigned manifest (atomic shards.json replace)."""
+    import json
+    import os
+    spt = ShardedPageTable(3, 32, page_size=4, max_pages=8)
+    spt.alloc_step(np.arange(1, 7, dtype=np.uint32), np.zeros(6, np.int64))
+    checkpoint_sharded(spt, str(tmp_path), step=1)
+    spt.lose_shard(spt.live_shards()[-1])
+    path = checkpoint_sharded(spt, str(tmp_path), step=1)
+    with open(path) as f:
+        doc = json.load(f)
+    man = TS.ShardManifest(int(doc["shard_manifest"]["prefix_bits"]),
+                           tuple(doc["shard_manifest"]["owners"]))
+    assert man == spt.manifest and len(man.live_shards()) == 2
+    assert os.path.basename(path) == "shards.json"
+
+
+# --- the simulated multi-host storm (pytest entry point) -------------------
+
+def test_multihost_storm_grow_and_loss():
+    """Small edition of the CI shard-soak: 2x-overcommitted storm with a
+    forced lazy resize and a host-group loss; every request completes, 0
+    proactive aborts, shadow map and counters stay consistent (verified
+    in-storm every other round)."""
+    cluster = MH.SimCluster(hosts=2, pages_per_shard=24, slots_per_shard=3,
+                            page_size=4, max_len=16, megastep_k=4,
+                            fail_on_abort=True)
+    wl = synthetic_workload(10, vocab_size=64, max_len=16, seed=0,
+                            prompt_len=(2, 4), max_new=(6, 10))
+    s = cluster.run_storm(wl, max_rounds=200, grow_round=1, lose_round=3)
+    assert int(s["completed"]) == int(s["submitted"]) == 10
+    assert int(s["aborts_observed"]) == 0
+    assert int(s["rehomed"]) >= 0 and int(s["live_shards"]) == 1
+
+
+def test_probe_stats_cover_routed_ops():
+    PT.probe_stats_reset()
+    spt = ShardedPageTable(2, 16, page_size=4, max_pages=4)
+    seqs = np.arange(1, 5, dtype=np.uint32)
+    spt.alloc_step(seqs, np.zeros(4, np.int64))
+    spt.lookup_pages(seqs, np.zeros(4, np.int64))
+    assert PT.PROBE_STATS["keys_probed"] > 0
+    PT.probe_stats_reset()

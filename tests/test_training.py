@@ -147,3 +147,60 @@ def test_elastic_plan():
     shape, axes = FT.elastic_plan(240, model_parallel=16)  # lost a host
     assert shape == (15, 16) and axes == ("data", "model")
     assert FT.accum_for(256, 240) == 2
+
+
+def test_save_resave_merges_extra(tmp_path):
+    """Re-saving a committed step with changed ``extra`` metadata must land
+    it (atomically) instead of silently dropping it — the shard-manifest
+    re-commit after an elastic remesh depends on this."""
+    state = {"w": jnp.zeros((2,))}
+    CKPT.save(str(tmp_path), 3, state, extra={"manifest": [0, 1]})
+    path = CKPT.save(str(tmp_path), 3, state, extra={"manifest": [0, 0]})
+    import json
+    with open(os.path.join(path, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["extra"]["manifest"] == [0, 0]
+    # leaves untouched (restart determinism): re-save is metadata-only
+    restored, _ = CKPT.restore(str(tmp_path), state, step=3)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.zeros(2))
+
+
+def test_sharded_checkpoint_commit_protocol(tmp_path):
+    """save_shard is invisible until commit_sharded lands shards.json; the
+    committed step round-trips every shard's payload + extras, and a
+    re-commit with a new shard manifest replaces it atomically."""
+    CKPT.save_shard(str(tmp_path), 4, 0, {"keys": np.arange(3, dtype=np.uint32)},
+                    extra={"n_cells": 32})
+    CKPT.save_shard(str(tmp_path), 4, 1, {"keys": np.arange(5, dtype=np.uint32)})
+    assert CKPT.latest_sharded_step(str(tmp_path)) is None   # not committed
+    CKPT.commit_sharded(str(tmp_path), 4,
+                        shard_manifest={"prefix_bits": 1, "owners": [0, 1]})
+    assert CKPT.latest_sharded_step(str(tmp_path)) == 4
+    shards, man, step = CKPT.restore_sharded(str(tmp_path))
+    assert step == 4 and man["owners"] == [0, 1]
+    assert [s["keys"].size for s in shards] == [3, 5]
+    assert shards[0]["_extra"]["n_cells"] == 32
+    # re-commit with a reassigned manifest (post-remesh re-save path)
+    CKPT.commit_sharded(str(tmp_path), 4,
+                        shard_manifest={"prefix_bits": 1, "owners": [0, 0]})
+    _, man, _ = CKPT.restore_sharded(str(tmp_path))
+    assert man["owners"] == [0, 0]
+
+
+def test_elastic_table_plan_agrees_with_manifest():
+    """The two halves of elastic recovery describe the same fleet: the
+    surviving mesh's host-group count == the reassigned manifest's live
+    shard count."""
+    from repro.dist.table_shard import ShardManifest
+    man = ShardManifest.balanced(4)
+    new_man, shape, names = FT.elastic_table_plan(man, lost_shard=1,
+                                                  model_parallel=16)
+    assert len(new_man.live_shards()) == 3
+    assert names == ("pod", "data", "model") and shape[0] == 3
+    assert shape[0] * shape[1] * shape[2] == 3 * FT.POD_CHIPS
+    # down to one surviving group the pod axis collapses into data
+    one = ShardManifest.balanced(2)
+    new_man, shape, names = FT.elastic_table_plan(one, lost_shard=1,
+                                                  model_parallel=16)
+    assert len(new_man.live_shards()) == 1
+    assert names == ("data", "model") and shape == (16, 16)

@@ -44,6 +44,7 @@ def replay(BT, PT, jnp):
     refactored implementations while this script records the originals.
     """
     records = []
+    LPT = PT.for_strategy("linear")   # the strategy-bound facade
 
     # --- Leg 1: mixed-op churn on the batched table -----------------------
     rng = np.random.default_rng(0)
@@ -73,13 +74,13 @@ def replay(BT, PT, jnp):
     records.append({"leg": "rebuild", "state": state_digest(ht_big)})
 
     # --- Leg 2: the page-table allocator ----------------------------------
-    table = PT.create_table(32, seed=1)
+    table = LPT.create_table(32, seed=1)
     B, max_pages, page_size = 4, 8, 2
     seq_ids = jnp.arange(B, dtype=jnp.int32)
     positions = jnp.zeros((B,), jnp.int32)
     block = jnp.full((B, max_pages), -1, jnp.int32)
     for step in range(10):
-        res, block = PT.alloc_step_incremental(
+        res, block = LPT.alloc_step_incremental(
             table, seq_ids, positions, block, page_size=page_size)
         table = res.table
         records.append({"leg": "alloc", "step": step,
@@ -89,25 +90,25 @@ def replay(BT, PT, jnp):
 
     # evict two lanes, then a plain (non-incremental) alloc_step
     evict = jnp.asarray([False, True, True, False])
-    table = PT.free_sequences(table, seq_ids, positions,
+    table = LPT.free_sequences(table, seq_ids, positions,
                               page_size=page_size, max_pages=max_pages,
                               active=evict)
-    block = PT.invalidate_block_rows(block, evict)
+    block = LPT.invalidate_block_rows(block, evict)
     records.append({"leg": "free", "state": state_digest(table),
                     "ret": digest(block)})
-    res = PT.alloc_step(table, seq_ids, positions, page_size=page_size)
+    res = LPT.alloc_step(table, seq_ids, positions, page_size=page_size)
     table = res.table
     records.append({"leg": "alloc_plain", "state": state_digest(table),
                     "ret": digest(res.write_slot, res.aborted)})
 
     # wait-free reads + rebuilt cache must pin too
-    pages = PT.lookup_pages(table, seq_ids, positions,
+    pages = LPT.lookup_pages(table, seq_ids, positions,
                             page_size=page_size, max_pages=max_pages)
-    rebuilt = PT.rebuild_block_table(table, seq_ids, max_pages)
+    rebuilt = LPT.rebuild_block_table(table, seq_ids, max_pages)
     records.append({"leg": "lookup", "ret": digest(pages, rebuilt)})
 
     # Section 4.3 rehash (page permutation)
-    fresh, old_slots, new_slots, live = PT.rehash(table, 64)
+    fresh, old_slots, new_slots, live = LPT.rehash(table, 64)
     records.append({"leg": "rehash", "state": state_digest(fresh),
                     "ret": digest(old_slots, new_slots, live)})
     return records
