@@ -82,6 +82,15 @@ class ModelConfig:
     # meta via engine.fallback_report, never silent.
     probe_strategy: str = "linear"
 
+    # on-device telemetry counter plane (obs/counters.py): when True,
+    # make_decode_state adds a ``counters`` pytree leaf and the serve step
+    # accumulates probe/page/abort/token counts in-graph; they ride the
+    # megastep scan and are read out at the existing once-per-K host sync,
+    # so instrumentation adds ZERO extra device syncs.  When False the leaf
+    # is never created and the compiled program is bitwise-identical to the
+    # pre-telemetry one (identity fast path, pinned by tests/test_obs.py).
+    telemetry: bool = False
+
     @property
     def scan_unroll(self) -> int:
         return self.num_layers if self.unroll_layers else 1

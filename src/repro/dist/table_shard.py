@@ -61,6 +61,7 @@ import numpy as np
 from repro.core import batched as BT
 from repro.core import encoding as E
 from repro.core import hashing as H
+from repro.obs import counters as OC
 
 PREFIX_SEED = 0x50D5EED   # routing hash seed — independent of probe hashes
 DEFAULT_PREFIX_BITS = 6   # 64 prefix ranges: fine-grained enough to respread
@@ -260,6 +261,13 @@ class TableShard:
         old = self._mark_moved(old, old_np)
         moves = MoveSet(old_np.astype(np.int32),
                         np.asarray(new_slots)[mig].astype(np.int32))
+        # host-plane telemetry (obs/counters.py): migration work is eager
+        # and host-driven, so it reports on the host counter plane — the
+        # derived probe count is one old-table find per candidate plus
+        # insert + find + delete per migrated key
+        OC.note_host("migration_moved", moves.n)
+        OC.note_host("probe_steps",
+                     int(np.asarray(act).sum()) + 3 * moves.n)
         shard = dataclasses.replace(self, table=table, old=old,
                                     migrated=self.migrated + moves.n)
         return shard._maybe_finish(), moves

@@ -36,17 +36,23 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import logging
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as OBS
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.kernels import stats as KS
 from repro.models.registry import get_model
 from repro.serving import engine as EG
 from repro.serving import page_table as PT
 from repro.serving.sched import (Scheduler, churn_request,
                                  synthetic_workload)
+
+logger = logging.getLogger(__name__)
 
 
 class ContinuousBatcher:
@@ -60,7 +66,8 @@ class ContinuousBatcher:
                  page_size: int, rules=None, seed: int = 0,
                  megastep_k: int = 1, verify_block_table: bool = False,
                  scheduler: Scheduler | None = None,
-                 n_pages: int | None = None, auto_refill: bool = True):
+                 n_pages: int | None = None, auto_refill: bool = True,
+                 tracer: OBS.Tracer | None = None):
         self.cfg, self.params = cfg, params
         self.B, self.max_len, self.page_size = batch, max_len, page_size
         self.K = max(1, int(megastep_k))
@@ -84,6 +91,21 @@ class ContinuousBatcher:
             megastep_k=self.K)
         self.sched.K = self.K
         self.sched.n_pages = None if pool is None else pool.n_pages
+        # telemetry (obs/): span tracer shared with the scheduler, metrics
+        # registry absorbing the repo's measurement surfaces, and the
+        # cumulative device-counter snapshot the per-K sync differences
+        self.tracer = tracer
+        self.sched.tracer = tracer
+        self.metrics = OBS.MetricsRegistry()
+        self.metrics.source("fallback",
+                            lambda: EG.fallback_report(cfg, rules))
+        self.metrics.source("kernel", lambda: dict(KS.KERNEL_STATS))
+        self.metrics.source("probe", lambda: dict(PT.PROBE_STATS))
+        self._ctr_prev: dict = {}
+        # quiet engine degradations (kernel fallbacks, gspmd decode, oracle
+        # probe path) surface once at startup, not only in dryrun/CI
+        logger.info("engine fallback report: %s",
+                    EG.fallback_report(cfg, rules))
         self.pos = np.zeros(batch, np.int32)
         self.tokens = jnp.zeros((batch, 1), jnp.int32)
         self.next_seq_id = batch
@@ -168,6 +190,7 @@ class ContinuousBatcher:
                     req.sampled.append(int(toks[s, k]))
                     if req.first_token_at is None:
                         req.first_token_at = clk
+                        self._emit("first_token", req=req.req_id)
 
     def _apply_plan(self, plan):
         st = self.sched
@@ -177,10 +200,16 @@ class ContinuousBatcher:
             mask[evict] = True
             dmask = jnp.asarray(mask)
             maxP = -(-self.max_len // self.page_size)
+            t_before = self.state["table"]
             self.state["table"] = self.pt.free_sequences(
                 self.state["table"], self.state["seq_ids"],
                 jnp.asarray(self.pos), page_size=self.page_size,
                 max_pages=maxP, active=dmask)
+            if "counters" in self.state:
+                # eager scalar adds between rounds — still no extra syncs
+                self.state["counters"] = OBS.note_free(
+                    self.state["counters"], table_before=t_before,
+                    table_after=self.state["table"])
             self.state["block_table"] = self.pt.invalidate_block_rows(
                 self.state["block_table"], dmask)
         if evict:
@@ -189,10 +218,13 @@ class ContinuousBatcher:
             self.state["active"] = jnp.asarray(active)
         if plan.grow_to is not None and "table" in self.state:
             # PROACTIVE Section 4.3 rebuild: before the abort, between
-            # megasteps — the wait-free read path never sees it mid-flight
+            # megasteps — the wait-free read path never sees it mid-flight.
+            # Traced as "rebuild" (eager, atomic), NOT "grow": only the
+            # sharded table's lazy resize opens a frozen-old-table window.
             self.state = EG.rebuild_page_table(self.state,
                                                n_pages=plan.grow_to,
                                                strategy=self.strategy)
+            self._emit("rebuild", reason="grow", n_pages=plan.grow_to)
         if plan.admissions:
             seq_ids = np.asarray(self.state["seq_ids"]).copy()
             active = np.asarray(self.state["active"]).copy()
@@ -245,6 +277,41 @@ class ContinuousBatcher:
             self.state["ring_v"] = rows(self.state["ring_v"], 1, 0)
             self.state["ring_pos"] = rows(self.state["ring_pos"], 0, -1)
 
+    def _emit(self, event: str, **fields):
+        if self.tracer is not None:
+            self.tracer.emit(event, self.sched.clock, **fields)
+
+    def _emit_decode(self, p0: np.ndarray, p1: np.ndarray):
+        """Per-round decode span: which requests decoded, how many tokens
+        landed, how many page-boundary allocations they implied (derived
+        from positions — exact regardless of the telemetry knob)."""
+        reqs = [r.req_id for r in self.sched.lanes if r is not None]
+        if self.tracer is None or not reqs:
+            return
+        ps = self.page_size
+        pages = 0
+        for s, r in enumerate(self.sched.lanes):
+            if r is None:
+                continue
+            pages += sum(1 for p in range(int(p0[s]), int(p1[s]))
+                         if p % ps == 0)
+        self._emit("decode", reqs=reqs,
+                   tokens=int((p1 - p0).sum()), pages=pages)
+
+    def _read_counters(self):
+        """Fetch the device counter plane at the per-K sync (the buffers
+        are already on their way for ``pos`` — zero extra dispatches) and
+        fold the round's delta into the metrics registry."""
+        if "counters" not in self.state:
+            return None
+        snap = OBS.snapshot(self.state["counters"])
+        d = OBS.delta(snap, self._ctr_prev)
+        self._ctr_prev = snap
+        for k, v in d.items():
+            if v:
+                self.metrics.inc(k, v)
+        return d
+
     def step_round(self):
         """One scheduled megastep round (K tokens per occupied lane)."""
         if self.auto_refill:
@@ -260,6 +327,7 @@ class ContinuousBatcher:
             self.pos = np.asarray(self.state["pos"]).copy()  # for aborts)
             self.sched.advance(self.K)       # 1 host sync per K tokens
             self._absorb(np.asarray(toks), p0, self.pos)
+            self._emit_decode(p0, self.pos)
             if self.verify and "table" in self.state:
                 self._check_block_table()
             aborted = self.state.get("aborted")
@@ -275,11 +343,34 @@ class ContinuousBatcher:
                                                    n_pages=n_pages * 2,
                                                    strategy=self.strategy)
                 self.sched.note_aborts(n_ab, grew_to=n_pages * 2)
-            plan = self.sched.plan_round(
-                self.pos,
-                EG.decode_headroom(self.state, strategy=self.strategy))
+                self._emit("rebuild", reason="reactive",
+                           n_pages=n_pages * 2)
+            pool = EG.decode_headroom(self.state, strategy=self.strategy)
+            plan = self.sched.plan_round(self.pos, pool)
             self._apply_plan(plan)
             probed = ps["keys_probed"]
+        self.metrics.inc("keys_probed", probed)
+        ctr = self._read_counters()
+        if pool is not None:
+            self.metrics.set_gauge("live_pages", pool.live_pages)
+            self.metrics.set_gauge("tombstones", pool.tombstones)
+            self.metrics.set_gauge("free_cells", pool.free_cells)
+            self.metrics.set_gauge("occupancy", pool.occupancy)
+        if self.tracer is not None:
+            health = None
+            if "table" in self.state:
+                t = self.state["table"]
+                n = int(self.state["pools"].k.shape[1])
+                tombs = int(t.num_tombs)
+                health = {
+                    "live": int(t.num_keys), "tombs": tombs, "n_cells": n,
+                    "free": n - int(t.num_keys),
+                    "tomb_density": tombs / max(n, 1),
+                    "occupancy": (int(t.num_keys) + tombs) / max(n, 1),
+                    "probe_p99": PT.PageTable.probe_p99(t),
+                    "migrated": 0, "migration_left": 0}
+            self._emit("round", counters=ctr, health=health,
+                       keys_probed=probed)
         self.sched.end_round(keys_probed=probed)
         return plan
 
@@ -296,6 +387,22 @@ class ContinuousBatcher:
                 return True
             self.step_round()
         return self.sched.drained
+
+    # -- telemetry exporters ----------------------------------------------
+
+    def metrics_text(self) -> str:
+        """Prometheus text-exposition snapshot of the registry."""
+        return self.metrics.prometheus_text()
+
+    def metrics_json(self) -> str:
+        """JSON snapshot of the registry (same numbers)."""
+        return self.metrics.json_snapshot()
+
+    def emit_summary(self):
+        """Final trace line: the scheduler roll-up (invariant 3 of
+        tools/trace_report.py reconciles its abort count against the
+        trace's abort events)."""
+        self._emit("summary", **self.sched.summary())
 
 
 def main():
@@ -337,11 +444,22 @@ def main():
                          " hopscotch = tombstone-free deletes + scheduler "
                          "slack, see core/probe_strategies.py)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the on-device counter plane "
+                         "(cfg.telemetry; read out at the per-K sync)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a deterministic JSONL span trace "
+                         "(obs/trace.py; render with tools/trace_report.py)")
+    ap.add_argument("--metrics-out", default=None, metavar="PREFIX",
+                    help="write PREFIX.prom (Prometheus text) and "
+                         "PREFIX.json registry snapshots at exit")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.probe_strategy != cfg.probe_strategy:
         cfg = dataclasses.replace(cfg, probe_strategy=args.probe_strategy)
+    if args.telemetry:
+        cfg = dataclasses.replace(cfg, telemetry=True)
     model = get_model(cfg)
     params, _ = model.init(cfg, jax.random.PRNGKey(0))
 
@@ -353,12 +471,15 @@ def main():
                       policy=args.policy,
                       proactive=not args.no_proactive)
     fixed = args.requests > 0
+    tracer = OBS.Tracer(args.trace) if args.trace else None
     srv = ContinuousBatcher(cfg, params, batch=args.batch,
                             max_len=args.max_len, page_size=args.page_size,
                             megastep_k=args.megastep,
                             verify_block_table=args.verify_block_table,
                             scheduler=sched, n_pages=n_pages,
-                            auto_refill=not fixed, seed=args.seed)
+                            auto_refill=not fixed, seed=args.seed,
+                            tracer=tracer)
+    print(f"[serve] fallback report: {EG.fallback_report(cfg, None)}")
     if fixed:
         sched.submit_many(synthetic_workload(
             args.requests, vocab_size=cfg.vocab_size, max_len=args.max_len,
@@ -387,6 +508,19 @@ def main():
                      for k, v in summary.items()))
     print(f"[serve] done — megastep K={srv.K}: host synced once per K "
           "tokens; page slots were reused in place (no compaction)")
+    if tracer is not None:
+        srv.emit_summary()
+        tracer.close()
+        print(f"[serve] trace: {tracer.path} ({tracer.n_events} events)")
+    if args.metrics_out:
+        d = os.path.dirname(args.metrics_out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.metrics_out + ".prom", "w") as f:
+            f.write(srv.metrics_text())
+        with open(args.metrics_out + ".json", "w") as f:
+            f.write(srv.metrics_json())
+        print(f"[serve] metrics: {args.metrics_out}.prom / .json")
     if fixed and not sched.drained:
         print("[serve] FAIL: workload not drained")
         return 1

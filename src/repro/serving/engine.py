@@ -75,6 +75,7 @@ from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import nn
 from repro.models import ssm
+from repro.obs import counters as OC
 from repro.serving import page_table as PT
 from repro.serving import paged
 from repro.core import batched as BT
@@ -312,6 +313,13 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
                 (cfg.num_layers, B, S_src, cfg.n_kv, cfg.hd), dtype)
             state["cross_v"] = jnp.zeros(
                 (cfg.num_layers, B, S_src, cfg.n_kv, cfg.hd), dtype)
+        if getattr(cfg, "telemetry", False):
+            # on-device counter plane (obs/counters.py): rides the megastep
+            # scan, read out at the existing per-K host sync.  When the knob
+            # is off the leaf does not exist and every update site below is
+            # skipped — identity fast path, bitwise parity with
+            # pre-telemetry programs (tests/test_obs.py).
+            state["counters"] = OC.Counters.zeros()
         return state
 
     axes: Dict[str, Any] = {"pos": (None,), "seq_ids": (None,),
@@ -356,6 +364,8 @@ def make_decode_state(cfg, B: int, S_max: int, *, rules=None,
     if cfg.family == "encdec":
         axes["cross_k"] = ("layer", "batch", None, "kv", None)
         axes["cross_v"] = ("layer", "batch", None, "kv", None)
+    if getattr(cfg, "telemetry", False):
+        axes["counters"] = OC.Counters.axes()
 
     state = jax.eval_shape(build) if abstract else build()
     return state, axes
@@ -877,6 +887,13 @@ def _manual_decode_parts(cfg, *, S_max: int, rules,
         new_state["table"] = table
         new_state["block_table"] = bt
         new_state["aborted"] = state["aborted"] | aborts
+        if "counters" in state:
+            # replicated scalar adds, identical on every chip — the counter
+            # plane crosses to the host only at the per-K megastep sync
+            new_state["counters"] = OC.update_token_counters(
+                state["counters"], act=act, aborts=aborts,
+                positions=positions, page_size=page_size,
+                table_before=state["table"], table_after=table)
 
         attn = functools.partial(
             _paged_attn_shard, cfg, lp=lp, write_slot=write_slot,
@@ -1350,6 +1367,14 @@ def _serve_step_impl(cfg, params, state, tokens, positions, mrope,
     # advanced, no KV written — the caller must evict or rebuild)
     new_state["aborted"] = state["aborted"] | aborts
     new_state["pos"] = jnp.where(act & ~aborts, positions + 1, positions)
+    if "counters" in state:
+        # one site covers every family: paged families routed through
+        # _page_ops (table deltas + probe twin), ssm has no table leaf so
+        # only token/abort counts tick
+        new_state["counters"] = OC.update_token_counters(
+            state["counters"], act=act, aborts=aborts, positions=positions,
+            page_size=page_size, table_before=state.get("table"),
+            table_after=new_state.get("table"))
     return logits[:, 0].astype(jnp.float32), new_state
 
 

@@ -51,6 +51,7 @@ from typing import Iterator, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import batched as BT
 from repro.core import encoding as E
@@ -397,6 +398,23 @@ class PageTable:
         """Extra free cells the forecaster must hold for this strategy's
         no-ABORT guarantee (0 for linear/robinhood — Prop. 2 is exact)."""
         return self._impl.forecast_slack(n_pages)
+
+    @staticmethod
+    def probe_p99(table: BT.HashTable, q: float = 99.0) -> float:
+        """Host-side probe-length percentile of the CURRENT pool: for every
+        live key, its displacement from the hash slot (mod table size) — the
+        linear-probe distance a lookup walks.  Eager/NumPy (pulls the cell
+        array once); telemetry/report-path only, never inside jit."""
+        tab = np.asarray(table.table)
+        occ = (tab != BT.E.EMPTY) & (tab != BT.E.TOMBSTONE)
+        idx = np.nonzero(occ)[0]
+        if not idx.size:
+            return 0.0
+        hv = np.asarray(BT._hash(
+            table, jnp.asarray(np.asarray(BT.E.dec_key(tab[idx]),
+                                          np.uint32))))
+        d = (idx - hv) % tab.shape[0]
+        return float(np.percentile(d, q))
 
     def headroom(self, table: BT.HashTable) -> Headroom:
         """Synchronous (host) headroom read.  One device sync for the two

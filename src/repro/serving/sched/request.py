@@ -95,3 +95,13 @@ class Request:
         if self.first_token_at is None:
             return None
         return self.first_token_at - self.arrival
+
+    def tpot(self) -> Optional[float]:
+        """Time per output token after the first (steps/token), preemption
+        stalls included — the decode-phase SLO companion to TTFT.  None
+        until finished with at least two sampled tokens."""
+        if (self.finished_at is None or self.first_token_at is None
+                or len(self.sampled) < 2):
+            return None
+        return ((self.finished_at - self.first_token_at)
+                / (len(self.sampled) - 1))

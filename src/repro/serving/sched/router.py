@@ -40,7 +40,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serving.sched.request import QUEUED, RUNNING, Request
-from repro.serving.sched.scheduler import Plan, Scheduler
+from repro.serving.sched.scheduler import (Plan, Scheduler,
+                                           latency_percentiles)
 from repro.serving.sharded_table import ShardedPageTable
 
 
@@ -68,6 +69,18 @@ class PrefixRouter:
         self.seq_of: Dict[int, int] = {}      # req_id -> sequence id
         self.unique_submitted = 0             # per-shard counters double-
         self.rehomed = 0                      # count re-homes; these don't
+        self.tracer = None                    # obs/trace.py span stream
+
+    def set_tracer(self, tracer) -> None:
+        """Install one Tracer across the router and every per-shard
+        scheduler; each scheduler's spans carry its shard id as a tag."""
+        self.tracer = tracer
+        for sid, sc in self.scheds.items():
+            sc.tracer = tracer
+            sc.trace_tags = {"shard": sid}
+
+    def _clock(self) -> int:
+        return next(iter(self.scheds.values())).clock if self.scheds else 0
 
     # -- placement --------------------------------------------------------
 
@@ -105,9 +118,16 @@ class PrefixRouter:
         headroom already covers it."""
         plans: Dict[int, Plan] = {}
         for sid, sc in self.scheds.items():
+            old_pages = self.spt.headroom(sid).n_pages
             plan = sc.plan_round(positions[sid], self.spt.headroom(sid))
             if plan.grow_to is not None:
                 self.spt.grow_shard(sid, plan.grow_to)
+                if self.tracer is not None:
+                    # the frozen-old-table window OPENS here; it closes at
+                    # the migrate_done event the driver emits
+                    self.tracer.emit("grow", sc.clock, shard=sid,
+                                     n_pages_old=old_pages,
+                                     n_pages_new=plan.grow_to)
             plans[sid] = plan
         return plans
 
@@ -129,6 +149,9 @@ class PrefixRouter:
         dead = self.scheds.pop(sid)
         self.spt.lose_shard(sid)
         victims = list(dead.running()) + list(dead.queue)
+        if self.tracer is not None:
+            self.tracer.emit("lose_host", dead.clock, shard=sid,
+                             victims=[r.req_id for r in victims])
         for r in dead.running():
             r.state, r.slot = QUEUED, None
             r.preemptions += 1
@@ -161,12 +184,5 @@ class PrefixRouter:
                 total[k] = total.get(k, 0) + v
         total["submitted"] = self.unique_submitted
         total["rehomed"] = self.rehomed
-        waits = [r.queue_wait() for r in self.finished()
-                 if r.queue_wait() is not None]
-        ttfts = [r.ttft() for r in self.finished() if r.ttft() is not None]
-        for name, xs in (("queue_wait", waits), ("ttft", ttfts)):
-            total[f"{name}_p50"] = (float(np.percentile(xs, 50)) if xs
-                                    else float("nan"))
-            total[f"{name}_p99"] = (float(np.percentile(xs, 99)) if xs
-                                    else float("nan"))
+        total.update(latency_percentiles(self.finished()))
         return total

@@ -134,6 +134,17 @@ class Scheduler:
         self.rounds: List[RoundStats] = []
         self._pending: Optional[RoundStats] = None
         self._abort_accum = 0
+        # span tracing (obs/trace.py): a driver/router installs a Tracer
+        # and tag dict (e.g. {"shard": sid}) after construction; every
+        # lifecycle transition below then emits its span edge on the
+        # virtual clock.  None = zero overhead.
+        self.tracer = None
+        self.trace_tags: Dict[str, int] = {}
+
+    def _emit(self, event: str, **fields) -> None:
+        if self.tracer is not None:
+            self.tracer.emit(event, self.clock, **self.trace_tags,
+                             **fields)
 
     # -- intake -----------------------------------------------------------
 
@@ -142,6 +153,7 @@ class Scheduler:
         req.state = QUEUED
         self.queue.append(req)
         self.stats.submitted += 1
+        self._emit("arrival", req=req.req_id, resubmit=req.preemptions)
 
     def submit_many(self, reqs: Sequence[Request]) -> None:
         for r in reqs:
@@ -175,6 +187,8 @@ class Scheduler:
         self.stats.completed += 1
         if req.missed_deadline:
             self.stats.deadline_misses += 1
+        self._emit("finish", req=req.req_id, tokens=len(req.sampled),
+                   ttft=req.ttft(), tpot=req.tpot())
         return True
 
     def _preempt(self, req: Request) -> bool:
@@ -186,6 +200,7 @@ class Scheduler:
         req.preemptions += 1
         self.queue.append(req)
         self.stats.preemptive_evictions += 1
+        self._emit("preempt", req=req.req_id)
         return True
 
     def evict(self, req: Request) -> bool:
@@ -204,6 +219,9 @@ class Scheduler:
         req._prefill_len = int(req.known_tokens().size)  # noqa: SLF001
         self.lanes[slot] = req
         self.stats.admitted += 1
+        self._emit("admit", req=req.req_id, slot=slot,
+                   prefill=req._prefill_len,  # noqa: SLF001
+                   readmit=req.preemptions)
 
     # -- the round --------------------------------------------------------
 
@@ -217,6 +235,7 @@ class Scheduler:
         (the forecaster was off, capped, or wrong) and the driver rebuilt."""
         self.stats.aborts += int(n_lanes)
         self._abort_accum += int(n_lanes)
+        self._emit("abort", lanes=int(n_lanes), grew_to=grew_to)
         if grew_to is not None:
             self.stats.reactive_rebuilds += 1
             self.n_pages = int(grew_to)
@@ -382,21 +401,29 @@ class Scheduler:
 
     def latency_summary(self) -> Dict[str, float]:
         """Deterministic virtual-clock latency percentiles over finished
-        requests (steps): queue-wait (arrival -> first admission) and TTFT
-        (arrival -> first sampled token)."""
-        out: Dict[str, float] = {}
-        waits = [r.queue_wait() for r in self.finished
-                 if r.queue_wait() is not None]
-        ttfts = [r.ttft() for r in self.finished if r.ttft() is not None]
-        for name, xs in (("queue_wait", waits), ("ttft", ttfts)):
-            if xs:
-                out[f"{name}_p50"] = float(np.percentile(xs, 50))
-                out[f"{name}_p99"] = float(np.percentile(xs, 99))
-            else:
-                out[f"{name}_p50"] = out[f"{name}_p99"] = float("nan")
-        return out
+        requests (steps): queue-wait (arrival -> first admission), TTFT
+        (arrival -> first sampled token) and TPOT (steps per output token
+        after the first, preemption stalls included)."""
+        return latency_percentiles(self.finished)
 
     def summary(self) -> Dict[str, float]:
         s = dataclasses.asdict(self.stats)
         s.update(self.latency_summary())
         return s
+
+
+def latency_percentiles(finished: Sequence[Request]) -> Dict[str, float]:
+    """queue_wait / ttft / tpot p50+p99 over finished requests — shared by
+    ``Scheduler.latency_summary`` and the router's cross-shard roll-up."""
+    out: Dict[str, float] = {}
+    series = (("queue_wait", [r.queue_wait() for r in finished]),
+              ("ttft", [r.ttft() for r in finished]),
+              ("tpot", [r.tpot() for r in finished]))
+    for name, xs in series:
+        xs = [x for x in xs if x is not None]
+        if xs:
+            out[f"{name}_p50"] = float(np.percentile(xs, 50))
+            out[f"{name}_p99"] = float(np.percentile(xs, 99))
+        else:
+            out[f"{name}_p50"] = out[f"{name}_p99"] = float("nan")
+    return out

@@ -327,6 +327,28 @@ class ShardedPageTable:
                         "migrated": mig, "migration_left": left}
         return out
 
+    def health(self, sid: int) -> Dict[str, float]:
+        """One shard's table-health gauge for the telemetry trace
+        (``shard_health`` event, obs/trace.py): the paper's observable
+        space-efficiency properties — tombstone density, probe-length p99
+        (over current + frozen-old cells during a migration window) — plus
+        the resize cursor's progress.  Eager/host-side; report-path only."""
+        sh = self._shards[sid].shard
+        mig, left = sh.migration_progress()
+        n = sh.n_cells()
+        tombs = int(sh.table.num_tombs)
+        p99 = PT.PageTable.probe_p99(sh.table)
+        if sh.old is not None:
+            tombs += int(sh.old.num_tombs)
+            p99 = max(p99, PT.PageTable.probe_p99(sh.old))
+        live = sh.live_pages()
+        return {"live": live, "tombs": tombs, "n_cells": n,
+                "free": sh.free_cells(),
+                "tomb_density": tombs / max(n, 1),
+                "occupancy": (live + tombs) / max(n, 1),
+                "probe_p99": p99,
+                "migrated": mig, "migration_left": left}
+
 
 # ---------------------------------------------------------------------------
 # Sharded checkpointing (training/checkpoint.py format).  The table-layer

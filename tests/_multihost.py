@@ -103,7 +103,8 @@ class SimCluster:
                  max_len: int = 32, megastep_k: int = 4,
                  strategy: str = "linear", safety_pages: int = 0,
                  place_on_devices: bool = False,
-                 fail_on_abort: bool = False, verbose: bool = False):
+                 fail_on_abort: bool = False, verbose: bool = False,
+                 tracer=None):
         max_pages = -(-max_len // page_size)
         self.spt = ShardedPageTable(hosts, pages_per_shard,
                                     strategy=strategy, page_size=page_size,
@@ -122,6 +123,14 @@ class SimCluster:
         self.rounds_run = 0
         self.fail_on_abort = fail_on_abort
         self.verbose = verbose
+        # span tracing (obs/trace.py): request spans come from the routed
+        # schedulers; the harness adds per-round decode/migrate/health and
+        # the final summary, all on the shared virtual clock
+        self.tracer = tracer
+        if tracer is not None:
+            self.router.set_tracer(tracer)
+        self._round_tokens: Dict[int, int] = {}
+        self._round_pages: Dict[int, int] = {}
         self._devices = jax.devices() if place_on_devices else None
         if self._devices:
             self._place_all()
@@ -137,6 +146,9 @@ class SimCluster:
         st.shard.table = jax.device_put(st.shard.table, dev)
         if st.shard.old is not None:
             st.shard.old = jax.device_put(st.shard.old, dev)
+
+    def _clock(self) -> int:
+        return self.router._clock()
 
     # -- lane views --------------------------------------------------------
 
@@ -174,6 +186,9 @@ class SimCluster:
                 n_ab = int(ab.sum())
                 if n_ab:
                     self.aborts += n_ab
+                    if self.tracer is not None:
+                        self.tracer.emit("abort", self._clock(),
+                                         lanes=n_ab, grew_to=None)
                     if self.fail_on_abort:
                         raise AssertionError(
                             f"proactive-path ABORT on lanes "
@@ -189,6 +204,17 @@ class SimCluster:
                     self.shadow.alloc(int(seq[i]),
                                       int(pos[i]) // self.page_size,
                                       int(ws[i]))
+                if self.tracer is not None:
+                    # per-shard decode attribution for the round's spans
+                    off = 0
+                    for s in sids:
+                        n = self.hosts[s].pos.size
+                        sl = slice(off, off + n)
+                        self._round_tokens[s] = (self._round_tokens.get(s, 0)
+                                                 + int(live[sl].sum()))
+                        self._round_pages[s] = (self._round_pages.get(s, 0)
+                                                + int(boundary[sl].sum()))
+                        off += n
                 pos = pos + live.astype(np.int64)   # aborted lanes freeze
                 self._scatter_pos(sids, pos)
             # migration makes progress every substep, like a background
@@ -196,7 +222,8 @@ class SimCluster:
             for src, dst in self.spt.service_migration():
                 self.shadow.move(src, dst)
 
-    def plan_and_apply(self) -> None:
+    def plan_and_apply(self, mig0: Optional[Dict[int, int]] = None,
+                       win0: Optional[set] = None) -> None:
         self.router.advance(self.K)
         # first sampled (non-forced) token: the lane's position moved past
         # its recompute-prefill length — what TTFT measures
@@ -206,6 +233,31 @@ class SimCluster:
                 if (r is not None and r.first_token_at is None
                         and host.pos[s] > getattr(r, "_prefill_len", 0)):
                     r.first_token_at = sc.clock
+                    if self.tracer is not None:
+                        self.tracer.emit("first_token", sc.clock,
+                                         req=r.req_id, shard=sid)
+        if self.tracer is not None:
+            # per-round spans, emitted BEFORE plan_round so the line order
+            # keeps this round's inserts outside any window plan_round is
+            # about to open (trace invariant 2 leans on that ordering)
+            clock = self._clock()
+            for sid in self.hosts:
+                shard = self.spt.shard(sid)
+                reqs = [r.req_id for r in self.router.scheds[sid].lanes
+                        if r is not None]
+                self.tracer.emit("decode", clock, shard=sid, reqs=reqs,
+                                 tokens=self._round_tokens.get(sid, 0),
+                                 pages=self._round_pages.get(sid, 0))
+                if win0 and sid in win0:
+                    # every open-window round reports progress, even 0 moves
+                    moved = shard.migrated - (mig0 or {}).get(sid, 0)
+                    self.tracer.emit("migrate", clock, shard=sid,
+                                     moved=moved)
+                    if not shard.migrating:
+                        self.tracer.emit("migrate_done", clock, shard=sid,
+                                         total=shard.migrated)
+                h = self.spt.health(sid)
+                self.tracer.emit("shard_health", clock, shard=sid, **h)
         positions = {sid: self.hosts[sid].pos for sid in self.hosts}
         plans = self.router.plan_round(positions)
         for sid, plan in plans.items():
@@ -229,8 +281,15 @@ class SimCluster:
         self.router.end_round()
 
     def run_round(self) -> None:
+        live0 = set(self.spt.live_shards())
+        # migration-window membership + move counts at round start: the
+        # round's migrate events report the delta over its substeps
+        mig0 = {sid: self.spt.shard(sid).migrated for sid in live0}
+        win0 = {sid for sid in live0 if self.spt.shard(sid).migrating}
+        self._round_tokens = {}
+        self._round_pages = {}
         self.decode_substeps()
-        self.plan_and_apply()
+        self.plan_and_apply(mig0=mig0, win0=win0)
         self.rounds_run += 1
 
     # -- events ------------------------------------------------------------
@@ -243,8 +302,15 @@ class SimCluster:
         if not cands:
             return -1
         sid = cands[0] if sid is None or sid not in cands else sid
+        old_pages = self.spt.headroom(sid).n_pages
         self.spt.grow_shard(sid, self.spt.shard(sid).n_cells() * factor)
         self.router.scheds[sid].n_pages = self.spt.headroom(sid).n_pages
+        if self.tracer is not None:
+            # injected lazy resize opens the same frozen-old-table window
+            # a controller-decided grow would
+            self.tracer.emit("grow", self._clock(), shard=sid,
+                             n_pages_old=old_pages,
+                             n_pages_new=self.spt.headroom(sid).n_pages)
         if self._devices:
             self._place_all()
         return sid
@@ -320,6 +386,14 @@ class SimCluster:
         s["rounds"] = self.rounds_run
         s["aborts_observed"] = self.aborts
         s["live_shards"] = len(self.spt.live_shards())
+        if self.tracer is not None:
+            # the sim's aborts are cluster-observed (alloc_step), not
+            # scheduler-reported; the summary carries the observed count so
+            # the trace checker reconciles abort events against it
+            fields = {k: (float(v) if isinstance(v, float) else int(v))
+                      for k, v in s.items()}
+            fields["aborts"] = self.aborts
+            self.tracer.emit("summary", self._clock(), **fields)
         return s
 
 
@@ -352,6 +426,9 @@ def main(argv=None) -> int:
     ap.add_argument("--fail-on-abort", action="store_true")
     ap.add_argument("--place-on-devices", action="store_true",
                     help="pin each shard's tables to its own jax device")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a request-span / table-health JSONL trace "
+                         "(obs/trace.py; check with tools/trace_report.py)")
     args = ap.parse_args(argv)
 
     if args.place_on_devices and len(jax.devices()) < 2:
@@ -370,12 +447,18 @@ def main(argv=None) -> int:
                             seed=args.seed, prompt_len=(2, 5),
                             max_new=(args.max_len - 8, args.max_len - 4))
 
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer(args.trace)
+
     cluster = SimCluster(
         hosts=args.hosts, pages_per_shard=args.pages_per_shard,
         slots_per_shard=args.slots_per_shard, page_size=args.page_size,
         max_len=args.max_len, megastep_k=args.megastep_k,
         strategy=args.strategy, fail_on_abort=args.fail_on_abort,
-        place_on_devices=args.place_on_devices, verbose=True)
+        place_on_devices=args.place_on_devices, verbose=True,
+        tracer=tracer)
 
     print(f"shard-soak: hosts={args.hosts} pages/shard="
           f"{args.pages_per_shard} requests={len(wl)} "
@@ -384,6 +467,10 @@ def main(argv=None) -> int:
     s = cluster.run_storm(wl, max_rounds=args.max_rounds,
                           grow_round=args.grow_round,
                           lose_round=args.lose_round)
+
+    if tracer is not None:
+        tracer.close()
+        print(f"  trace: {tracer.path} ({tracer.n_events} events)")
 
     if args.lose_round is not None:
         shape = elastic_remesh_after_loss(args.hosts, 1)

@@ -1,0 +1,184 @@
+"""Telemetry-plane tests (obs/): the identity fast path, golden trace
+determinism, the metrics registry exporters, and the trace-invariant
+checker that CI runs over soak traces.
+
+The two load-bearing pins:
+
+* ``test_telemetry_off_parity`` — with ``cfg.telemetry`` off the decode
+  state has no ``counters`` leaf and the megastep's tokens AND every state
+  leaf are bitwise identical to the instrumented run's (the counter plane
+  may not change a single bit of the decode, on or off); and
+* ``test_trace_determinism`` — the same storm traced twice produces
+  byte-identical JSONL (virtual clock only, sorted keys, fixed
+  separators), which is what makes traces diffable across CI runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib.util
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax
+
+import _multihost as MH
+from repro import obs as OBS
+from repro.configs import get_smoke_config
+from repro.models.registry import get_model
+from repro.serving import engine as EG
+from repro.serving.sched import synthetic_workload
+
+
+def _load_trace_report():
+    p = (pathlib.Path(__file__).resolve().parent.parent
+         / "tools" / "trace_report.py")
+    spec = importlib.util.spec_from_file_location("trace_report", p)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# counter plane
+# ---------------------------------------------------------------------------
+
+def test_telemetry_off_parity():
+    """cfg.telemetry=False is an identity: no counters leaf, and the
+    megastep's tokens and every shared state leaf match the telemetry=True
+    run bitwise (the plane is pure observation)."""
+    cfg = get_smoke_config("qwen2.5-32b")
+    model = get_model(cfg)
+    params, _ = model.init(cfg, jax.random.PRNGKey(0))
+    B, K = 2, 8
+    tok0 = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0,
+                              cfg.vocab_size)
+
+    s_off, _ = EG.make_decode_state(cfg, B, S_max=32, page_size=4)
+    assert "counters" not in s_off
+    mega_off = jax.jit(EG.make_serve_megastep(cfg, S_max=32, K=K,
+                                              page_size=4))
+    t_off, st_off = mega_off(params, s_off, tok0)
+
+    cfg_on = dataclasses.replace(cfg, telemetry=True)
+    s_on, _ = EG.make_decode_state(cfg_on, B, S_max=32, page_size=4)
+    assert "counters" in s_on
+    mega_on = jax.jit(EG.make_serve_megastep(cfg_on, S_max=32, K=K,
+                                             page_size=4))
+    t_on, st_on = mega_on(params, s_on, tok0)
+
+    np.testing.assert_array_equal(np.asarray(t_off), np.asarray(t_on))
+    for k in st_off:
+        same = jax.tree.map(
+            lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))),
+            st_off[k], st_on[k])
+        assert all(jax.tree.leaves(same)), f"leaf {k} diverged"
+
+    c = OBS.snapshot(st_on["counters"])
+    assert c["tokens_accepted"] == B * K
+    assert c["pages_allocated"] > 0
+    # probe twin of alloc_step_incremental's 2*need_new host note
+    assert c["probe_steps"] == 2 * c["pages_allocated"]
+    assert c["abort_events"] == 0
+
+
+def test_host_counters_scope_is_additive():
+    OBS.note_host("migration_moved", 3)
+    with OBS.host_counters_scope() as h:
+        assert h["migration_moved"] == 0
+        OBS.note_host("migration_moved", 2)
+        assert h["migration_moved"] == 2
+    assert OBS.HOST_COUNTERS["migration_moved"] >= 5  # outer + body
+
+
+# ---------------------------------------------------------------------------
+# trace determinism
+# ---------------------------------------------------------------------------
+
+def _run_traced_storm(path):
+    wl = synthetic_workload(2, vocab_size=256, max_len=16, seed=0,
+                            prompt_len=(2, 4), max_new=(8, 10))
+    with OBS.Tracer(str(path)) as tr:
+        cluster = MH.SimCluster(hosts=2, pages_per_shard=16,
+                                slots_per_shard=2, page_size=4,
+                                max_len=16, megastep_k=4, tracer=tr)
+        s = cluster.run_storm(wl, max_rounds=60, grow_round=1)
+    assert int(s["completed"]) == 2
+    return path.read_bytes()
+
+
+def test_trace_determinism(tmp_path):
+    """Two identical 2-request churn storms -> byte-identical traces, and
+    the trace passes the CI invariant checker."""
+    a = _run_traced_storm(tmp_path / "a.jsonl")
+    b = _run_traced_storm(tmp_path / "b.jsonl")
+    assert a == b, "trace is not deterministic across identical runs"
+
+    tr = _load_trace_report()
+    evs = tr.load(str(tmp_path / "a.jsonl"))
+    assert tr.check_invariants(str(tmp_path / "a.jsonl"), evs) == []
+    kinds = {e["event"] for e in evs}
+    # the storm grew a shard, so the window events must be in the stream
+    assert {"arrival", "admit", "decode", "shard_health", "grow",
+            "migrate", "summary"} <= kinds
+    assert evs[-1]["event"] == "summary"
+
+
+def test_trace_invariant_checker_catches_violations(tmp_path):
+    tr = _load_trace_report()
+    lines = [
+        '{"clock":0,"event":"arrival","req":1}',
+        # decode before admit -> lifecycle violation
+        '{"clock":1,"event":"decode","pages":1,"reqs":[1],"shard":0,'
+        '"tokens":4}',
+        '{"clock":1,"event":"grow","n_pages_new":16,"n_pages_old":8,'
+        '"shard":0}',
+        '{"clock":2,"event":"admit","prefill":2,"req":1,"slot":0}',
+        # window open, pages>0, no migrate at clock 3 -> window violation
+        '{"clock":3,"event":"decode","pages":2,"reqs":[1],"shard":0,'
+        '"tokens":4}',
+        '{"clock":4,"event":"abort","grew_to":null,"lanes":2}',
+        '{"clock":5,"event":"finish","req":1,"tokens":4,"tpot":1.0,'
+        '"ttft":3}',
+        # 2 abort lanes vs aborts=1 -> reconciliation violation
+        '{"clock":5,"event":"summary","aborts":1,"completed":1}',
+    ]
+    p = tmp_path / "bad.jsonl"
+    p.write_text("\n".join(lines) + "\n")
+    bad = tr.check_invariants(str(p), tr.load(str(p)))
+    assert len(bad) == 3, bad
+    assert any("outside an admitted interval" in b for b in bad)
+    assert any("frozen-old-table window" in b for b in bad)
+    assert any("summary reports aborts=1" in b for b in bad)
+
+
+# ---------------------------------------------------------------------------
+# registry + exporters
+# ---------------------------------------------------------------------------
+
+def test_metrics_registry_exporters():
+    reg = OBS.MetricsRegistry(namespace="t")
+    reg.inc("probe_steps", 5)
+    reg.inc("probe_steps", 2)
+    reg.set_gauge("occupancy", 0.5)
+    reg.source("fb", lambda: {"a": 1, "mode": "ok"})
+    snap = reg.snapshot()
+    assert snap["counters"]["probe_steps"] == 7
+    assert snap["gauges"]["fb_a"] == 1
+    assert snap["info"]["fb_mode"] == "ok"
+
+    text = reg.prometheus_text()
+    assert "# TYPE t_probe_steps counter" in text
+    assert "t_probe_steps 7" in text
+    assert "t_occupancy 0.5" in text
+    assert 't_info{key="fb_mode",value="ok"} 1' in text
+
+    loaded = json.loads(reg.json_snapshot())
+    assert loaded["counters"]["probe_steps"] == 7
+
+    # a dying source degrades to an info entry instead of killing serving
+    reg.source("dead", lambda: (_ for _ in ()).throw(RuntimeError("x")))
+    snap2 = reg.snapshot()
+    assert "dead_error" in snap2["info"]

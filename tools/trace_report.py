@@ -1,0 +1,304 @@
+#!/usr/bin/env python
+"""Render and check JSONL traces from the obs span stream.
+
+Input is one or more traces written by ``repro.obs.Tracer`` (the serve CLI's
+``--trace``, or ``tests/_multihost.py --trace``).  Two modes:
+
+* default — a human report per trace: the per-request timeline
+  (arrival -> admit -> first token -> finish, with preemptions and
+  re-homes), TTFT/TPOT histograms, and the table-health dashboard
+  (per-shard tombstone-density and probe-p99 curves, migration progress).
+
+* ``--check-invariants`` — machine mode for CI: replay the trace as a
+  line-ordered state machine and fail (exit 1) on any violation of the
+  trace invariants (also listed in ``src/repro/obs/README.md``):
+
+  1. lifecycle containment — every ``decode`` / ``first_token`` /
+     ``finish`` / ``preempt`` referencing a request falls inside one of
+     that request's admitted intervals (``admit`` .. ``finish``/
+     ``preempt``/``lose_host``), by line order;
+  2. frozen-window writes — while a shard's lazy-resize window is open
+     (``grow`` .. ``migrate_done``), a round that allocates pages on that
+     shard (``decode`` with ``pages > 0``) must also report migration
+     progress (a ``migrate`` event for that shard at the same clock) —
+     inserts during the window go to the NEW table and the old one only
+     drains, so allocation without migration service would mean the old
+     table is being written;
+  3. abort reconciliation — the summed ``lanes`` of all ``abort`` events
+     equals the ``aborts`` field of the final ``summary`` event (no abort
+     is latched device-side without surfacing in the span stream, and
+     vice versa).
+
+Within one clock value the emission order is line order (single-threaded
+driver) and the checker relies on it — see ``obs/trace.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Optional, Tuple
+
+SPARK = " .:-=+*#%@"
+
+
+def load(path: str) -> List[dict]:
+    evs = []
+    with open(path) as f:
+        for n, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                evs.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{path}:{n}: bad JSON line: {e}")
+    return evs
+
+
+# ---------------------------------------------------------------------------
+# invariants
+# ---------------------------------------------------------------------------
+
+def check_invariants(path: str, evs: List[dict]) -> List[str]:
+    """Replay the trace; return a list of violation strings (empty = OK)."""
+    bad: List[str] = []
+    admitted: Dict[int, bool] = {}         # req -> currently admitted
+    open_window: Dict[int, bool] = {}      # shard -> grow window open
+    migrate_at = {(e.get("shard"), e["clock"])
+                  for e in evs if e["event"] == "migrate"}
+    abort_lanes = 0
+    summary: Optional[dict] = None
+
+    def _admitted(req, n, what):
+        if not admitted.get(req):
+            bad.append(f"{path}:{n}: {what} for request {req} outside an "
+                       f"admitted interval")
+
+    for n, e in enumerate(evs, 1):
+        ev = e["event"]
+        if ev == "admit":
+            admitted[e["req"]] = True
+        elif ev == "first_token":
+            _admitted(e["req"], n, "first_token")
+        elif ev == "preempt":
+            _admitted(e["req"], n, "preempt")
+            admitted[e["req"]] = False
+        elif ev == "finish":
+            _admitted(e["req"], n, "finish")
+            admitted[e["req"]] = False
+        elif ev == "lose_host":
+            for r in e.get("victims", []):
+                admitted[r] = False       # lanes died with the host
+            open_window.pop(e.get("shard"), None)
+        elif ev == "decode":
+            for r in e.get("reqs", []):
+                _admitted(r, n, "decode")
+            sid = e.get("shard")
+            if (open_window.get(sid) and e.get("pages", 0) > 0
+                    and (sid, e["clock"]) not in migrate_at):
+                bad.append(
+                    f"{path}:{n}: shard {sid} allocated {e['pages']} "
+                    f"page(s) at clock {e['clock']} inside its frozen-old-"
+                    f"table window with no migrate event that round")
+        elif ev == "grow":
+            if "shard" in e:
+                open_window[e["shard"]] = True
+        elif ev == "migrate_done":
+            open_window[e.get("shard")] = False
+        elif ev == "abort":
+            abort_lanes += int(e.get("lanes", 0))
+        elif ev == "summary":
+            if summary is not None:
+                bad.append(f"{path}:{n}: more than one summary event")
+            summary = e
+
+    if summary is None:
+        bad.append(f"{path}: no summary event (truncated trace?)")
+    else:
+        if evs and evs[-1]["event"] != "summary":
+            bad.append(f"{path}: summary is not the last event")
+        want = summary.get("aborts")
+        if want is not None and int(want) != abort_lanes:
+            bad.append(f"{path}: abort events sum to {abort_lanes} lanes "
+                       f"but summary reports aborts={int(want)}")
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+def _spark(xs: List[float], width: int = 48) -> str:
+    if not xs:
+        return ""
+    if len(xs) > width:                   # downsample by max within bins
+        step = len(xs) / width
+        xs = [max(xs[int(i * step):max(int(i * step) + 1,
+                                       int((i + 1) * step))])
+              for i in range(width)]
+    lo, hi = min(xs), max(xs)
+    if hi <= lo:
+        return SPARK[1] * len(xs)
+    scale = (len(SPARK) - 1) / (hi - lo)
+    return "".join(SPARK[int(round((x - lo) * scale))] for x in xs)
+
+
+def _hist(xs: List[float], title: str, bins: int = 8,
+          width: int = 40) -> List[str]:
+    xs = [x for x in xs if x is not None and not math.isnan(x)]
+    if not xs:
+        return [f"  {title}: (no data)"]
+    lo, hi = min(xs), max(xs)
+    span = (hi - lo) or 1.0
+    counts = [0] * bins
+    for x in xs:
+        counts[min(bins - 1, int((x - lo) / span * bins))] += 1
+    peak = max(counts)
+    out = [f"  {title}  n={len(xs)}  min={lo:.1f}  max={hi:.1f}"]
+    for i, c in enumerate(counts):
+        a = lo + span * i / bins
+        b = lo + span * (i + 1) / bins
+        bar = "#" * int(round(c / peak * width))
+        out.append(f"    [{a:8.1f},{b:8.1f})  {bar} {c}")
+    return out
+
+
+def report(path: str, evs: List[dict]) -> None:
+    print(f"== {path}  ({len(evs)} events) ==")
+
+    # -- per-request timeline ---------------------------------------------
+    reqs: Dict[int, dict] = {}
+    for e in evs:
+        if "req" not in e:
+            continue
+        r = reqs.setdefault(e["req"], {"admits": [], "preempts": 0})
+        ev, c = e["event"], e["clock"]
+        if ev == "arrival":
+            r.setdefault("arrival", c)
+        elif ev == "admit":
+            r["admits"].append(c)
+        elif ev == "first_token":
+            r.setdefault("first_token", c)
+        elif ev == "preempt":
+            r["preempts"] += 1
+        elif ev == "finish":
+            r["finish"] = c
+            r["ttft"] = e.get("ttft")
+            r["tpot"] = e.get("tpot")
+            r["tokens"] = e.get("tokens")
+    rehomed = sum(1 for e in evs if e["event"] == "lose_host"
+                  for _ in e.get("victims", []))
+    print(f"-- requests: {len(reqs)} "
+          f"(finished {sum(1 for r in reqs.values() if 'finish' in r)}, "
+          f"re-homed {rehomed})")
+    for rid in sorted(reqs):
+        r = reqs[rid]
+        admits = ",".join(str(a) for a in r["admits"]) or "-"
+        print(f"  req {rid:4d}  arrive={r.get('arrival', '-'):>4} "
+              f"admit={admits:>8}  first_tok={r.get('first_token', '-'):>4} "
+              f"finish={r.get('finish', '-'):>4}  "
+              f"preempts={r['preempts']}  tokens={r.get('tokens', '-')}")
+
+    # -- latency histograms -----------------------------------------------
+    fins = [r for r in reqs.values() if "finish" in r]
+    for line in _hist([r.get("ttft") for r in fins], "TTFT (steps)"):
+        print(line)
+    for line in _hist([r.get("tpot") for r in fins], "TPOT (steps/token)"):
+        print(line)
+
+    # -- table health dashboard -------------------------------------------
+    shards: Dict[int, dict] = {}
+    for e in evs:
+        if e["event"] == "shard_health":
+            s = shards.setdefault(e["shard"], {"tomb": [], "p99": []})
+            s["tomb"].append(float(e.get("tomb_density", 0.0)))
+            s["p99"].append(float(e.get("probe_p99", 0.0)))
+        elif e["event"] == "round":                 # batcher single-table
+            h = e.get("health", {})
+            s = shards.setdefault(0, {"tomb": [], "p99": []})
+            s["tomb"].append(float(h.get("tomb_density", 0.0)))
+            s["p99"].append(float(h.get("probe_p99", 0.0)))
+    # migration progress comes from the migrate events themselves (one per
+    # open-window round), not the health gauge — a window that drains in a
+    # single round still gets its curve
+    migs: Dict[int, List[float]] = {}
+    for e in evs:
+        if e["event"] == "migrate":
+            sid = e.get("shard", 0)
+            prev = migs.get(sid, [0.0])[-1] if sid in migs else 0.0
+            migs.setdefault(sid, []).append(prev + float(e.get("moved", 0)))
+    if shards:
+        print("-- table health (per shard, one sample per round)")
+        for sid in sorted(shards):
+            s = shards[sid]
+            print(f"  shard {sid}: tomb_density "
+                  f"last={s['tomb'][-1]:.3f} |{_spark(s['tomb'])}|")
+            print(f"  shard {sid}: probe_p99    "
+                  f"last={s['p99'][-1]:.1f}   |{_spark(s['p99'])}|")
+            if sid in migs:
+                cum = migs[sid]
+                print(f"  shard {sid}: migration    "
+                      f"moved={cum[-1]:.0f} over {len(cum)} round(s) "
+                      f"|{_spark(cum)}|")
+    grows = [e for e in evs if e["event"] in ("grow", "rebuild")]
+    for e in grows:
+        if e["event"] == "grow":
+            print(f"  grow @clock {e['clock']}: shard {e.get('shard', 0)} "
+                  f"{e['n_pages_old']} -> {e['n_pages_new']} pages (lazy)")
+        else:
+            print(f"  rebuild @clock {e['clock']}: reason="
+                  f"{e.get('reason')} (eager, no window)")
+    for e in evs:
+        if e["event"] == "lose_host":
+            print(f"  lose_host @clock {e['clock']}: shard {e['shard']}, "
+                  f"{len(e.get('victims', []))} victims re-homed")
+
+    # -- counter plane roll-up --------------------------------------------
+    tot: Dict[str, float] = {}
+    for e in evs:
+        if e["event"] == "round":
+            for k, v in e.get("counters", {}).items():
+                tot[k] = tot.get(k, 0) + v
+    if tot:
+        print("-- device counter plane (summed round deltas)")
+        for k in sorted(tot):
+            print(f"  {k:24s} {int(tot[k])}")
+
+    summ = next((e for e in reversed(evs) if e["event"] == "summary"), None)
+    if summ:
+        keys = [k for k in ("completed", "submitted", "aborts", "rehomed",
+                            "preemptive_evictions", "ttft_p99", "tpot_p99")
+                if k in summ]
+        print("-- summary: " + "  ".join(f"{k}={summ[k]}" for k in keys))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("traces", nargs="+", help="JSONL trace file(s)")
+    ap.add_argument("--check-invariants", action="store_true",
+                    help="CI mode: exit 1 on any trace-invariant violation")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    for path in args.traces:
+        evs = load(path)
+        if args.check_invariants:
+            bad = check_invariants(path, evs)
+            if bad:
+                failures += len(bad)
+                for b in bad:
+                    print(f"VIOLATION: {b}", file=sys.stderr)
+            else:
+                print(f"{path}: {len(evs)} events, invariants OK")
+        else:
+            report(path, evs)
+    if args.check_invariants and failures:
+        print(f"{failures} invariant violation(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
